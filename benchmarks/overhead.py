@@ -1,0 +1,98 @@
+"""Scheduling-cycle overhead — the paper's "a few seconds per cycle".
+
+Measures (a) the twin's per-cycle decision latency during a live run
+(the paper's metric), (b) the steady-state latency of the jitted
+what-if engine alone (post-compilation — what a persistent daemon
+pays), and (c) the vectorized-kernel scheduling pass, across policy
+pool sizes — the scaling the TPU adaptation buys (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster.workload import paper_synthetic_trace
+from repro.core import whatif
+from repro.core.policies import EXTENDED_POOL, PAPER_POOL
+
+from benchmarks.figure3_radar import run_all
+
+
+def _bench(fn, n_iter: int = 20) -> float:
+    fn()  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        fn()
+    return (time.perf_counter() - t0) / n_iter
+
+
+def main(seed: int = 0) -> List[str]:
+    lines = []
+
+    # (a) live per-cycle latency (includes first-call compilation)
+    _, twin = run_all(seed=seed)
+    stats = twin.telemetry.cycle_latency_stats()
+    lines.append(
+        f"overhead,live_cycle,mean_s={stats['mean_s']:.4f},"
+        f"p50_s={stats['p50_s']:.4f},max_s={stats['max_s']:.4f},"
+        f"n={stats['n']},paper=a few seconds")
+
+    # (b) steady-state decision latency (jit-compiled, k=3 paper pool)
+    state = snapshot_state(seed)
+    pool3 = jnp.asarray(PAPER_POOL, dtype=jnp.int32)
+
+    def cycle3():
+        d = whatif.decide(state, pool3)
+        jax.block_until_ready(d.costs)
+
+    t3 = _bench(cycle3)
+    lines.append(f"overhead,steady_cycle_k3,us_per_call={t3 * 1e6:.0f}")
+
+    # (c) pool scaling: k=7 extended pool
+    pool7 = jnp.asarray(EXTENDED_POOL, dtype=jnp.int32)
+
+    def cycle7():
+        d = whatif.decide(state, pool7)
+        jax.block_until_ready(d.costs)
+
+    t7 = _bench(cycle7)
+    lines.append(
+        f"overhead,steady_cycle_k7,us_per_call={t7 * 1e6:.0f},"
+        f"scaling_vs_k3={t7 / max(t3, 1e-12):.2f}x")
+
+    # (d) the kernelized scheduling pass alone
+    from repro.kernels import ops
+
+    def kpass():
+        started, free = ops.twin_schedule_pass(state, pool7)
+        jax.block_until_ready(started)
+
+    tk = _bench(kpass)
+    lines.append(f"overhead,kernel_pass_k7,us_per_call={tk * 1e6:.0f}")
+    return lines
+
+
+# -- helper: a mid-trace snapshot with a busy queue --------------------
+
+def snapshot_state(seed: int):
+    import jax.numpy as jnp
+    from repro.core.state import add_job, empty_state, start_job
+    trace = paper_synthetic_trace(seed=seed)
+    st = empty_state(256, 32)
+    free = 32
+    # phase 2 moment: some burst jobs running, many queued
+    for j, spec in enumerate(trace[:80]):
+        st = add_job(st, spec.job_id, spec.submit_t, spec.nodes,
+                     spec.est_runtime)
+        if spec.nodes <= free:
+            st = start_job(st, spec.job_id, spec.submit_t + 1.0)
+            free -= spec.nodes
+    return st._replace(now=jnp.float32(trace[79].submit_t + 5.0))
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,76 @@
+"""§Roofline: aggregate the dry-run JSON records into the per-cell
+three-term roofline table (EXPERIMENTS.md §Roofline reads this).
+
+Usage::
+
+    python -m benchmarks.roofline [--dir results/dryrun] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import SHAPE_ORDER
+from repro.configs.registry import ARCH_ORDER
+
+
+def load_records(d: str) -> List[Dict]:
+    recs = []
+    for path in glob.glob(os.path.join(d, "*.json")):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table_lines(recs: List[Dict], mesh: str = "16x16") -> List[str]:
+    by_key = {(r["arch"], r["shape"]): r for r in recs
+              if r.get("mesh") == mesh}
+    lines = []
+    header = ("roofline,arch,shape,status,Tc_ms,Tm_ms,Tcoll_ms,bound,"
+              "useful_pct,peak_GiB,frac_of_roofline")
+    lines.append(header)
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = by_key.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"roofline,{arch},{shape},SKIP,,,,,,,")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"roofline,{arch},{shape},ERROR,,,,,,,")
+                continue
+            rl = r["roofline"]
+            peak = r["memory"].get("peak_bytes_per_device", 0) / 2 ** 30
+            # fraction of roofline = useful compute time / dominant term
+            t_dom = max(rl["t_compute"], rl["t_memory"],
+                        rl["t_collective"])
+            t_useful = rl["model_flops"] / 197e12
+            frac = t_useful / t_dom if t_dom > 0 else 0.0
+            lines.append(
+                f"roofline,{arch},{shape},ok,"
+                f"{rl['t_compute'] * 1e3:.2f},{rl['t_memory'] * 1e3:.2f},"
+                f"{rl['t_collective'] * 1e3:.2f},{rl['bottleneck']},"
+                f"{rl['useful_ratio'] * 100:.1f},{peak:.2f},"
+                f"{frac * 100:.1f}%")
+    return lines
+
+
+def main() -> List[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args, _ = ap.parse_known_args()
+    recs = load_records(args.dir)
+    if not recs:
+        return [f"roofline,no records found in {args.dir} — run "
+                f"`python -m repro.launch.dryrun --all` first"]
+    return table_lines(recs, args.mesh)
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

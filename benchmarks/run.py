@@ -1,0 +1,35 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,key=value,...`` CSV lines.  ``python -m benchmarks.run``
+runs everything; pass benchmark names to run a subset, e.g.
+``python -m benchmarks.run figure3_radar overhead``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (figure1_jobdist, figure3_radar, overhead,
+                            roofline, table1_policy_dist)
+    suite = {
+        "figure1_jobdist": figure1_jobdist.main,
+        "figure3_radar": figure3_radar.main,
+        "table1_policy_dist": table1_policy_dist.main,
+        "overhead": overhead.main,
+        "roofline": roofline.main,
+    }
+    chosen = sys.argv[1:] or list(suite)
+    t0 = time.perf_counter()
+    for name in chosen:
+        if name not in suite:
+            print(f"unknown benchmark {name!r}; have {list(suite)}")
+            continue
+        for line in suite[name]():
+            print(line)
+    print(f"benchmarks,total_wall_s={time.perf_counter() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

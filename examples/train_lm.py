@@ -1,0 +1,95 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps on the synthetic Markov pipeline, with checkpointing and
+a restart mid-run (the fault-tolerance story in miniature).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsyncCheckpointer, CheckpointManager
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.distributed.sharding import make_rules
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import count_params
+from repro.models import api
+from repro.train import OptimizerConfig, init_train_state, jit_train_step
+
+
+def hundred_m_config():
+    """~110M-param llama3-family config (GPT-2-small-ish shapes).
+
+    CPU note: ~30 s/step at the default batch — pass ``--steps 40
+    --restart-at 20`` for a quick demonstration of the restart path.
+    """
+    base = get_config("llama3.2-1b")
+    return dataclasses.replace(
+        base, name="llama-110m", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=3072, vocab_size=32768,
+        tie_embeddings=True, accum_steps=1, q_block=128, logit_chunk=256,
+    ).validate()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--restart-at", type=int, default=150,
+                    help="simulate a crash+restart at this step")
+    args = ap.parse_args()
+
+    cfg = hundred_m_config()
+    print(f"model: {cfg.name}, {count_params(api.param_table(cfg)) / 1e6:.1f}M params")
+    mesh = make_host_mesh()
+    rules = make_rules(mesh, "fsdp_tp")
+    opt = OptimizerConfig(peak_lr=1e-3, warmup_steps=20,
+                          total_steps=args.steps)
+    step_fn = jit_train_step(cfg, rules, opt)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch,
+                                  seed=0))
+
+    ckpt_dir = tempfile.mkdtemp(prefix="schedtwin_train_")
+    mgr = CheckpointManager(ckpt_dir, keep=2)
+    saver = AsyncCheckpointer(mgr)
+
+    def run_until(state, start, stop):
+        t0, toks = time.time(), 0
+        with mesh:
+            for s in range(start, stop):
+                batch = {k: jnp.asarray(v) for k, v in
+                         data.batch(s).items()}
+                state, m = step_fn(state, batch)
+                toks += args.batch * args.seq
+                if (s + 1) % 25 == 0:
+                    print(f"  step {s + 1:4d} loss {float(m['loss']):.4f} "
+                          f"tok/s {toks / (time.time() - t0):8.0f}")
+                if (s + 1) % 50 == 0:
+                    saver.save(s + 1, state)
+        saver.wait()
+        return state
+
+    print(f"phase 1: steps 0..{args.restart_at}")
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    state = run_until(state, 0, args.restart_at)
+    del state                                    # "crash"
+
+    print("restart: recovering from latest checkpoint...")
+    fresh = init_train_state(jax.random.PRNGKey(0), cfg)
+    step0, state, extra = mgr.restore_latest(fresh)
+    print(f"  resumed at step {step0}")
+    state = run_until(state, step0, args.steps)
+    print("done — loss should have decreased monotonically across the "
+          "restart (content-addressed data makes the stream seamless).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpoint substrate: atomic manifests, async save, elastic restore."""
+from repro.checkpoint.manager import (AsyncCheckpointer, CheckpointManager,
+                                      step_dir)
+
+__all__ = ["AsyncCheckpointer", "CheckpointManager", "step_dir"]

@@ -1,0 +1,307 @@
+"""PBS-like cluster emulator — the *physical* half of the twin loop.
+
+Plays the role of the production scheduler + 32-node CloudLab cluster
+of §4.1.  It owns the ground truth (true runtimes, real node counts),
+emits the PBS hook events the paper streams through Redis
+(``queuejob`` / ``runjob`` / ``jobobit``), and accepts ``qrun``
+feedback (§3.5).
+
+Two scheduler modes:
+  * static  — the emulator itself schedules with one fixed policy
+              (+ EASY backfill), using the *same* jitted
+              ``schedule_pass`` as the twin's simulator so baseline
+              semantics are bit-identical to the what-if model;
+  * twin    — scheduling authority is delegated: the emulator only
+              starts jobs the twin selects via ``qrun``.
+
+Crucially, scheduling (both modes) reasons over *predicted* job ends
+(start + user estimate) while actual completions occur at the true
+runtime — the §3.2 pull-back/push-forward asymmetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backfill import schedule_pass
+from repro.core.des import SLOWDOWN_TAU
+from repro.core.events import Event, EventBus, EventKind
+from repro.core.state import (DONE, INVALID, QUEUED, RUNNING, JobTable,
+                              SimState)
+from repro.cluster.workload import JobSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureSpec:
+    """Take ``nodes`` down at ``time`` for ``duration`` seconds."""
+    time: float
+    nodes: int
+    duration: float
+
+
+@dataclasses.dataclass
+class RunReport:
+    start_t: np.ndarray
+    end_t: np.ndarray
+    submit_t: np.ndarray
+    nodes: np.ndarray
+    true_runtime: np.ndarray
+    est_runtime: np.ndarray
+    n_jobs: int
+    total_nodes: int
+    makespan: float
+    avg_wait: float
+    max_wait: float
+    avg_slowdown: float
+    max_slowdown: float
+    utilization: float
+    n_events: int
+    n_restarts: int = 0
+
+    def metric_dict(self) -> Dict[str, float]:
+        return {
+            "avg_wait": self.avg_wait, "max_wait": self.max_wait,
+            "avg_slowdown": self.avg_slowdown,
+            "max_slowdown": self.max_slowdown,
+            "utilization": self.utilization, "makespan": self.makespan,
+        }
+
+
+_ARRIVAL, _END, _FAIL, _RECOVER = 0, 1, 2, 3
+
+
+class ClusterEmulator:
+    def __init__(self,
+                 trace: Sequence[JobSpec],
+                 total_nodes: int,
+                 bus: Optional[EventBus] = None,
+                 max_jobs: Optional[int] = None,
+                 failures: Sequence[FailureSpec] = (),
+                 check_invariants: bool = False) -> None:
+        self.trace = list(trace)
+        self.bus = bus if bus is not None else EventBus()
+        self.total_nodes = int(total_nodes)
+        self.capacity_nodes = int(total_nodes)  # shrinks on failures
+        self.free_nodes = int(total_nodes)
+        n = len(self.trace)
+        self.max_jobs = max_jobs if max_jobs is not None else max(
+            64, 1 << int(np.ceil(np.log2(max(n, 1) + 1))))
+        if n > self.max_jobs:
+            raise ValueError(f"trace has {n} jobs > capacity {self.max_jobs}")
+        self.failures = list(failures)
+        self.check_invariants = check_invariants
+
+        # ground-truth job arrays
+        m = self.max_jobs
+        self.submit_t = np.full(m, -1.0, dtype=np.float64)
+        self.nodes = np.zeros(m, dtype=np.int64)
+        self.est = np.zeros(m, dtype=np.float64)
+        self.true_rt = np.zeros(m, dtype=np.float64)
+        self.start_t = np.full(m, -1.0, dtype=np.float64)
+        self.end_t = np.full(m, -1.0, dtype=np.float64)
+        self.state = np.full(m, INVALID, dtype=np.int64)
+        self.remaining = np.zeros(m, dtype=np.float64)  # for restarts
+        self.now = 0.0
+        self.n_events = 0
+        self.n_restarts = 0
+        self._heap: List[Tuple[float, int, int, int]] = []
+        self._seq = 0
+        self._end_seq = np.full(m, -1, dtype=np.int64)  # stale-end guards
+
+        for spec in self.trace:
+            if spec.nodes > total_nodes:
+                raise ValueError(
+                    f"job {spec.job_id} requests {spec.nodes} > cluster "
+                    f"{total_nodes} nodes")
+            self._push(spec.submit_t, _ARRIVAL, spec.job_id)
+        for i, f in enumerate(self.failures):
+            self._push(f.time, _FAIL, i)
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: int, ident: int) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, ident))
+        self._seq += 1
+
+    def _publish(self, kind: EventKind, t: float, job_id: int = -1,
+                 **payload: float) -> None:
+        self.bus.publish(Event(kind=kind, time=t, job_id=job_id,
+                               payload=payload))
+
+    # ------------------------------------------------------------------
+    # qrun: decision feedback from the twin (§3.5)
+    def qrun(self, job_ids: List[int], t: float) -> None:
+        for j in job_ids:
+            if self.state[j] != QUEUED:
+                continue  # stale decision (already started/finished)
+            if self.nodes[j] > self.free_nodes:
+                raise RuntimeError(
+                    f"qrun job {j}: needs {self.nodes[j]} nodes, "
+                    f"only {self.free_nodes} free — twin/mirror divergence")
+            self._start_job(j, t)
+
+    def _start_job(self, j: int, t: float) -> None:
+        self.state[j] = RUNNING
+        self.start_t[j] = t
+        self.free_nodes -= int(self.nodes[j])
+        run = self.remaining[j] if self.remaining[j] > 0 else self.true_rt[j]
+        self._end_seq[j] = self._seq
+        self.end_t[j] = t + run
+        self._push(t + run, _END, j)
+        self._publish(EventKind.RUNJOB, t, j)
+
+    # ------------------------------------------------------------------
+    # static-mode scheduling: same pass as the twin's simulator
+    def _mirror_state(self) -> SimState:
+        """SimState view with *predicted* ends (start + estimate)."""
+        running = self.state == RUNNING
+        pred_end = np.where(running, self.start_t + self.est, self.end_t)
+        jobs = JobTable(
+            submit_t=jnp.asarray(self.submit_t, dtype=jnp.float32),
+            nodes=jnp.asarray(self.nodes, dtype=jnp.int32),
+            est_runtime=jnp.asarray(self.est, dtype=jnp.float32),
+            start_t=jnp.asarray(self.start_t, dtype=jnp.float32),
+            end_t=jnp.asarray(pred_end, dtype=jnp.float32),
+            state=jnp.asarray(self.state, dtype=jnp.int32),
+        )
+        return SimState(
+            jobs=jobs,
+            free_nodes=jnp.int32(self.free_nodes),
+            total_nodes=jnp.int32(self.capacity_nodes),
+            now=jnp.float32(self.now),
+        )
+
+    def _static_schedule(self, policy_id: int) -> None:
+        res = _jit_schedule_pass(self._mirror_state(), jnp.int32(policy_id))
+        started = np.asarray(res.started)
+        for j in np.nonzero(started)[0]:
+            self._start_job(int(j), self.now)
+
+    # ------------------------------------------------------------------
+    def run(self,
+            policy_id: Optional[int] = None,
+            on_event: Optional[Callable[[], None]] = None) -> RunReport:
+        """Run the full trace.
+
+        static mode: pass ``policy_id``.
+        twin mode:   pass ``on_event`` = twin.pump (the co-simulation
+        hook called after every published event).
+        """
+        if (policy_id is None) == (on_event is None):
+            raise ValueError("exactly one of policy_id / on_event required")
+
+        while self._heap:
+            t, _, kind, ident = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            self.n_events += 1
+
+            if kind == _ARRIVAL:
+                spec = self.trace[ident]
+                j = spec.job_id
+                self.submit_t[j] = spec.submit_t
+                self.nodes[j] = spec.nodes
+                self.est[j] = spec.est_runtime
+                self.true_rt[j] = spec.true_runtime
+                self.state[j] = QUEUED
+                self._publish(EventKind.QUEUEJOB, t, j,
+                              nodes=float(spec.nodes),
+                              est_runtime=float(spec.est_runtime))
+            elif kind == _END:
+                j = ident
+                # stale end events (job was killed/restarted) are skipped
+                if self.state[j] != RUNNING or t < self.end_t[j] - 1e-9:
+                    self.n_events -= 1
+                    continue
+                self.state[j] = DONE
+                self.end_t[j] = t
+                self.remaining[j] = 0.0
+                self.free_nodes += int(self.nodes[j])
+                self._publish(EventKind.JOBOBIT, t, j)
+            elif kind == _FAIL:
+                self._handle_failure(self.failures[ident], t)
+            elif kind == _RECOVER:
+                nodes = ident
+                self.capacity_nodes += nodes
+                self.free_nodes += nodes
+                self._publish(EventKind.NODEUP, t, nodes=float(nodes))
+            else:  # pragma: no cover
+                raise AssertionError(kind)
+
+            if policy_id is not None:
+                self._static_schedule(policy_id)
+            else:
+                on_event()
+
+            if self.check_invariants:
+                self._assert_invariants()
+
+        return self._report()
+
+    # ------------------------------------------------------------------
+    def _handle_failure(self, f: FailureSpec, t: float) -> None:
+        """NODEFAIL: shrink capacity; kill+requeue victims if needed."""
+        self.capacity_nodes -= f.nodes
+        self.free_nodes -= f.nodes
+        victims: List[int] = []
+        # free deficit -> kill running jobs (largest first = fewest kills)
+        running = [int(j) for j in np.nonzero(self.state == RUNNING)[0]]
+        running.sort(key=lambda j: -self.nodes[j])
+        while self.free_nodes < 0 and running:
+            v = running.pop(0)
+            victims.append(v)
+            self.free_nodes += int(self.nodes[v])
+            # full rerun on restart (no app checkpoint assumed)
+            self.remaining[v] = self.true_rt[v]
+            self.state[v] = QUEUED
+            self.start_t[v] = -1.0
+            self.end_t[v] = -1.0
+            self.n_restarts += 1
+        first_victim = victims[0] if victims else -1
+        self._publish(EventKind.NODEFAIL, t, nodes=float(f.nodes),
+                      victim_job=float(first_victim))
+        for v in victims[1:]:
+            self._publish(EventKind.NODEFAIL, t, nodes=0.0,
+                          victim_job=float(v))
+        if f.duration > 0:
+            self._push(t + f.duration, _RECOVER, f.nodes)
+
+    # ------------------------------------------------------------------
+    def _assert_invariants(self) -> None:
+        used = int(self.nodes[self.state == RUNNING].sum())
+        assert used + self.free_nodes == self.capacity_nodes, (
+            used, self.free_nodes, self.capacity_nodes)
+        assert self.free_nodes >= 0
+        started = self.start_t >= 0
+        assert np.all(self.start_t[started] >= self.submit_t[started] - 1e-9)
+
+    def _report(self) -> RunReport:
+        done = self.state == DONE
+        if not np.all(done[:len(self.trace)]):
+            stuck = np.nonzero(~done[:len(self.trace)])[0]
+            raise RuntimeError(f"jobs never completed: {stuck[:8]}...")
+        n = len(self.trace)
+        s, e = self.start_t[:n], self.end_t[:n]
+        sub, rt = self.submit_t[:n], self.true_rt[:n]
+        wait = np.maximum(s - sub, 0.0)
+        sd = np.maximum((wait + rt) / np.maximum(rt, SLOWDOWN_TAU), 1.0)
+        makespan = float(e.max() - sub.min())
+        util = float((self.nodes[:n] * rt).sum()
+                     / (self.total_nodes * max(makespan, 1e-9)))
+        return RunReport(
+            start_t=s.copy(), end_t=e.copy(), submit_t=sub.copy(),
+            nodes=self.nodes[:n].copy(), true_runtime=rt.copy(),
+            est_runtime=self.est[:n].copy(),
+            n_jobs=n, total_nodes=self.total_nodes, makespan=makespan,
+            avg_wait=float(wait.mean()), max_wait=float(wait.max()),
+            avg_slowdown=float(sd.mean()), max_slowdown=float(sd.max()),
+            utilization=min(util, 1.0), n_events=self.n_events,
+            n_restarts=self.n_restarts)
+
+
+@jax.jit
+def _jit_schedule_pass(state: SimState, policy_id):
+    return schedule_pass(state, policy_id)

@@ -1,0 +1,204 @@
+"""Workload generation.
+
+``paper_synthetic_trace`` reproduces the §4.1 evaluation trace exactly:
+150 jobs in four phases on a 32-node cluster, 5 s inter-arrival —
+deliberately constructed so that large/long phase-2 jobs block the
+short/small jobs behind them (the regime where SJF shines but hurts
+tail latency, which is what makes adaptive selection pay off).
+
+True runtimes are drawn as a fraction of the requested walltime
+(users overestimate — §3.2); the twin never sees them.
+
+``arch_job_mix`` maps the assigned LM architectures onto job classes so
+the same twin schedules a TPU training/serving fleet (examples/).
+``swf`` helpers read/write the Standard Workload Format for replaying
+real center logs (e.g. the Polaris-like distribution of Figure 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    job_id: int
+    submit_t: float
+    nodes: int
+    est_runtime: float   # user-requested walltime (visible to scheduler/twin)
+    true_runtime: float  # ground truth (emulator only)
+    tag: str = ""        # phase or job-class label
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    n_jobs: int
+    nodes: Tuple[int, int]        # inclusive range
+    walltime: Tuple[float, float] # seconds, inclusive range
+    tag: str
+
+
+PAPER_PHASES: Sequence[Phase] = (
+    Phase(25, (2, 4), (60.0, 180.0), "warmup"),
+    Phase(35, (16, 20), (500.0, 700.0), "burst"),
+    Phase(40, (6, 8), (200.0, 300.0), "steady"),
+    Phase(50, (2, 4), (30.0, 90.0), "tail"),  # "short-job tail ... of seconds"
+)
+PAPER_TOTAL_NODES = 32
+PAPER_ARRIVAL_GAP = 5.0  # seconds per job
+
+
+def paper_synthetic_trace(seed: int = 0,
+                          accuracy: Tuple[float, float] = (0.5, 1.0),
+                          arrival_gap: float = PAPER_ARRIVAL_GAP,
+                          phases: Sequence[Phase] = PAPER_PHASES,
+                          ) -> List[JobSpec]:
+    """The §4.1 four-phase synthetic workload (150 jobs).
+
+    ``accuracy`` is the true/estimated runtime ratio range; estimates are
+    the phase walltimes.  Deterministic given ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    jobs: List[JobSpec] = []
+    t = 0.0
+    jid = 0
+    for ph in phases:
+        for _ in range(ph.n_jobs):
+            nodes = int(rng.integers(ph.nodes[0], ph.nodes[1] + 1))
+            est = float(rng.uniform(ph.walltime[0], ph.walltime[1]))
+            acc = float(rng.uniform(accuracy[0], accuracy[1]))
+            jobs.append(JobSpec(
+                job_id=jid, submit_t=t, nodes=nodes,
+                est_runtime=est, true_runtime=max(1.0, est * acc),
+                tag=ph.tag))
+            jid += 1
+            t += arrival_gap
+    return jobs
+
+
+def poisson_trace(n_jobs: int, total_nodes: int, mean_gap: float,
+                  node_range: Tuple[int, int],
+                  walltime_range: Tuple[float, float],
+                  seed: int = 0,
+                  accuracy: Tuple[float, float] = (0.3, 1.0),
+                  heavy_tail: bool = True) -> List[JobSpec]:
+    """Generic Poisson-arrival workload with (optionally) lognormal
+    walltimes — matches the wide Polaris-style variability of Figure 1."""
+    rng = np.random.default_rng(seed)
+    jobs: List[JobSpec] = []
+    t = 0.0
+    lo_w, hi_w = walltime_range
+    for jid in range(n_jobs):
+        t += float(rng.exponential(mean_gap))
+        nodes = int(rng.integers(node_range[0],
+                                 min(node_range[1], total_nodes) + 1))
+        if heavy_tail:
+            mu = np.log(np.sqrt(lo_w * hi_w))
+            sigma = np.log(hi_w / lo_w) / 4.0
+            est = float(np.clip(rng.lognormal(mu, sigma), lo_w, hi_w))
+        else:
+            est = float(rng.uniform(lo_w, hi_w))
+        acc = float(rng.uniform(accuracy[0], accuracy[1]))
+        jobs.append(JobSpec(jid, t, nodes, est, max(1.0, est * acc), "poisson"))
+    return jobs
+
+
+# ----------------------------------------------------------------------
+# LM-fleet job classes: the twin as a TPU-cluster scheduler (examples/).
+# ----------------------------------------------------------------------
+
+#: pods requested per job class, per architecture scale bucket.
+_ARCH_PODS = {
+    "granite-20b": 2, "granite-3-2b": 1, "llama3.2-1b": 1,
+    "qwen2-72b": 8, "internvl2-76b": 8, "deepseek-v2-lite-16b": 2,
+    "olmoe-1b-7b": 1, "rwkv6-7b": 2, "recurrentgemma-2b": 1,
+    "whisper-small": 1,
+}
+
+
+def arch_job_mix(n_jobs: int, total_pods: int = 32, seed: int = 0,
+                 mean_gap: float = 30.0) -> List[JobSpec]:
+    """Jobs for a TPU fleet: training jobs (long, many pods), prefill
+    batches (short, few pods), decode services (medium).  Node counts
+    come from each architecture's pod footprint (`_ARCH_PODS`)."""
+    rng = np.random.default_rng(seed)
+    arches = list(_ARCH_PODS)
+    classes = (
+        ("train", 4.0, (1800.0, 7200.0)),
+        ("prefill", 1.0, (120.0, 600.0)),
+        ("decode", 2.0, (600.0, 1800.0)),
+    )
+    jobs: List[JobSpec] = []
+    t = 0.0
+    for jid in range(n_jobs):
+        t += float(rng.exponential(mean_gap))
+        arch = arches[int(rng.integers(len(arches)))]
+        cname, scale, wt = classes[int(rng.integers(len(classes)))]
+        pods = min(max(1, int(_ARCH_PODS[arch] * scale)), total_pods)
+        est = float(rng.uniform(*wt))
+        acc = float(rng.uniform(0.4, 1.0))
+        jobs.append(JobSpec(jid, t, pods, est, max(1.0, est * acc),
+                            tag=f"{arch}:{cname}"))
+    return jobs
+
+
+# ----------------------------------------------------------------------
+# Conversions & SWF I/O
+# ----------------------------------------------------------------------
+
+def trace_to_arrays(trace: Sequence[JobSpec]) -> Dict[str, np.ndarray]:
+    return {
+        "submit_t": np.array([j.submit_t for j in trace], dtype=np.float32),
+        "nodes": np.array([j.nodes for j in trace], dtype=np.int32),
+        "est_runtime": np.array([j.est_runtime for j in trace],
+                                dtype=np.float32),
+        "true_runtime": np.array([j.true_runtime for j in trace],
+                                 dtype=np.float32),
+    }
+
+
+def write_swf(trace: Sequence[JobSpec], path: str) -> None:
+    """Minimal Standard Workload Format writer (fields we use)."""
+    with open(path, "w") as f:
+        f.write("; SchedTwin synthetic trace\n")
+        for j in trace:
+            # id submit wait run nproc cpu mem reqproc reqtime ...
+            f.write(f"{j.job_id + 1} {j.submit_t:.0f} -1 "
+                    f"{j.true_runtime:.0f} {j.nodes} -1 -1 "
+                    f"{j.nodes} {j.est_runtime:.0f} -1\n")
+
+
+def read_swf(path: str, max_jobs: Optional[int] = None) -> List[JobSpec]:
+    jobs: List[JobSpec] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(";"):
+                continue
+            parts = line.split()
+            jid = len(jobs)
+            submit = float(parts[1])
+            run = max(1.0, float(parts[3]))
+            nproc = int(parts[7]) if int(parts[7]) > 0 else int(parts[4])
+            req = float(parts[8]) if float(parts[8]) > 0 else run
+            jobs.append(JobSpec(jid, submit, max(1, nproc), req, run, "swf"))
+            if max_jobs is not None and len(jobs) >= max_jobs:
+                break
+    return jobs
+
+
+def trace_stats(trace: Sequence[JobSpec]) -> Dict[str, float]:
+    """Figure-1-style distribution summary."""
+    nodes = np.array([j.nodes for j in trace])
+    rt = np.array([j.true_runtime for j in trace])
+    return {
+        "n_jobs": len(trace),
+        "nodes_min": float(nodes.min()), "nodes_p50": float(np.median(nodes)),
+        "nodes_max": float(nodes.max()),
+        "runtime_min_s": float(rt.min()),
+        "runtime_p50_s": float(np.median(rt)),
+        "runtime_max_s": float(rt.max()),
+        "node_seconds": float((nodes * rt).sum()),
+    }

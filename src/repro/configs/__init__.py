@@ -1,0 +1,9 @@
+"""Config package."""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, reduced
+from repro.configs.registry import (ARCHS, ARCH_ORDER, get_config,
+                                    get_smoke_config)
+from repro.configs.shapes import SHAPES, SHAPE_ORDER, ShapeCell, cell_applicable
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "reduced", "ARCHS",
+           "ARCH_ORDER", "get_config", "get_smoke_config", "SHAPES",
+           "SHAPE_ORDER", "ShapeCell", "cell_applicable"]

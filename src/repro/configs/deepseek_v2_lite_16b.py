@@ -1,0 +1,4 @@
+"""Config module for --arch (see registry for the source entry)."""
+from repro.configs.registry import DEEPSEEK_V2_LITE_16B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config module for --arch (see registry for the source entry)."""
+from repro.configs.registry import GRANITE_3_2B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config module for --arch (see registry for the source entry)."""
+from repro.configs.registry import LLAMA3_2_1B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config module for --arch (see registry for the source entry)."""
+from repro.configs.registry import RWKV6_7B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,24 @@
+"""The paper's own configuration (§4.1): cluster, policy pool, score."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+from repro.core.policies import EXTENDED_POOL, PAPER_POOL
+from repro.core.scoring import PAPER_WEIGHTS, ScoreWeights
+
+
+@dataclasses.dataclass(frozen=True)
+class TwinConfig:
+    total_nodes: int = 32             # 32-node PBS cluster (CloudLab)
+    max_jobs: int = 256
+    pool: Tuple[int, ...] = tuple(PAPER_POOL)      # WFP, FCFS, SJF
+    weights: ScoreWeights = PAPER_WEIGHTS          # 0.25 * each term
+    ensemble: int = 1                 # >1 -> uncertainty ensemble (beyond)
+    ensemble_noise: float = 0.3
+    trace_seed: int = 0
+    accuracy: Tuple[float, float] = (0.5, 1.0)     # true/estimated runtime
+
+
+PAPER_TWIN = TwinConfig()
+EXTENDED_TWIN = TwinConfig(pool=tuple(EXTENDED_POOL))

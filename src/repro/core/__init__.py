@@ -1,0 +1,28 @@
+"""SchedTwin core: the paper's contribution as composable JAX modules."""
+from repro.core.events import Event, EventBus, EventKind
+from repro.core.state import (DONE, INVALID, QUEUED, RUNNING, JobTable,
+                              SimState, empty_jobs, empty_state)
+from repro.core.policies import (EXTENDED_POOL, FCFS, PAPER_POOL, SJF, WFP,
+                                 policy_name, priority_key)
+from repro.core.backfill import PassResult, schedule_pass
+from repro.core.des import (DrainMetrics, DrainResult, drain_metrics,
+                            simulate_to_drain)
+from repro.core.scoring import (PAPER_WEIGHTS, ScoreWeights, policy_cost,
+                                radar_area, radar_normalize, radar_report,
+                                select_policy)
+from repro.core.whatif import Decision, decide, decide_ensemble, sharded_whatif
+from repro.core.twin import SchedTwin
+
+__all__ = [
+    "Event", "EventBus", "EventKind",
+    "JobTable", "SimState", "empty_jobs", "empty_state",
+    "INVALID", "QUEUED", "RUNNING", "DONE",
+    "WFP", "FCFS", "SJF", "PAPER_POOL", "EXTENDED_POOL",
+    "policy_name", "priority_key",
+    "PassResult", "schedule_pass",
+    "DrainResult", "DrainMetrics", "simulate_to_drain", "drain_metrics",
+    "ScoreWeights", "PAPER_WEIGHTS", "policy_cost", "select_policy",
+    "radar_area", "radar_normalize", "radar_report",
+    "Decision", "decide", "decide_ensemble", "sharded_whatif",
+    "SchedTwin",
+]

@@ -1,0 +1,139 @@
+"""One scheduling pass: priority order + EASY backfilling (vectorized).
+
+This is the inner loop of every what-if simulation and of the live
+scheduler — the paper's hot spot (each cycle runs k full drain
+simulations, each of which runs this pass at every event).
+
+EASY backfilling (Mu'alem & Feitelson, ref [18] of the paper):
+  1. Walk queued jobs in priority order; start each while it fits.
+     The first job that does not fit becomes the *head* and receives a
+     resource reservation.
+  2. The reservation ("shadow") time is the earliest time the head can
+     run given the predicted completion times of running jobs; ``extra``
+     is the node surplus at that time.
+  3. Later queued jobs may *backfill* now iff they fit now AND either
+     (a) finish (by estimate) before the shadow time, or
+     (b) use no more than ``extra`` nodes (then they may run past it).
+
+Everything is fixed-shape: scans over all ``max_jobs`` slots with
+validity masks, so the pass is vmappable over the policy axis and
+lowerable inside ``lax.while_loop``.
+
+A Pallas TPU kernel implementing the same pass with the queue resident
+in VMEM and the policy/ensemble batch on the grid lives in
+``repro/kernels/policy_eval.py`` (validated against this function).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policies
+from repro.core.state import (QUEUED, RUNNING, JobTable, SimState)
+
+
+class PassResult(NamedTuple):
+    state: SimState
+    started: jax.Array      # bool (max_jobs,) — jobs started in this pass
+    head_idx: jax.Array     # i32 scalar — reserved job slot (-1 if none)
+    shadow_time: jax.Array  # f32 scalar — reservation time (+inf if none)
+
+
+def schedule_pass(state: SimState, policy_id) -> PassResult:
+    jobs = state.jobs
+    now = state.now
+    max_jobs = jobs.capacity
+
+    queued = jobs.state == QUEUED
+    keys = policies.priority_key(jobs, now, policy_id)
+    keys = jnp.where(queued, keys, jnp.inf)
+    order = jnp.argsort(keys)  # stable: ties -> slot (submission) order
+
+    nodes = jobs.nodes
+    est = jobs.est_runtime
+
+    # ---- pass 1: greedy start until the first blocked job (the head) ----
+    def greedy_body(i, carry):
+        free, head_idx, head_found, started = carry
+        j = order[i]
+        is_q = queued[j]
+        fits = nodes[j] <= free
+        can_start = is_q & fits & (~head_found)
+        free = jnp.where(can_start, free - nodes[j], free)
+        started = started.at[j].set(started[j] | can_start)
+        blocked = is_q & (~fits) & (~head_found)
+        head_idx = jnp.where(blocked, j, head_idx)
+        head_found = head_found | blocked
+        return free, head_idx, head_found, started
+
+    free0 = state.free_nodes
+    started0 = jnp.zeros((max_jobs,), dtype=bool)
+    free1, head_idx, head_found, started1 = jax.lax.fori_loop(
+        0, max_jobs, greedy_body,
+        (free0, jnp.int32(-1), jnp.asarray(False), started0))
+
+    # ---- shadow time: when can the head start, given predicted ends? ----
+    # Running set includes jobs started in pass 1 (their predicted end is
+    # now + estimate; the twin never sees true runtimes).
+    running = (jobs.state == RUNNING) | started1
+    end_eff = jnp.where(started1, now + est, jobs.end_t)
+    end_eff = jnp.where(running, end_eff, jnp.inf)
+    nodes_r = jnp.where(running, nodes, 0)
+
+    sort_idx = jnp.argsort(end_eff)
+    ends_sorted = end_eff[sort_idx]
+    cum_free = free1 + jnp.cumsum(nodes_r[sort_idx])
+
+    head_nodes = jnp.where(head_found, nodes[head_idx], 0)
+    feasible = (cum_free >= head_nodes) & jnp.isfinite(ends_sorted)
+    any_feasible = jnp.any(feasible)
+    k = jnp.argmax(feasible)  # first feasible completion
+    shadow_time = jnp.where(
+        head_found,
+        jnp.where(any_feasible, ends_sorted[k], jnp.inf),
+        jnp.inf)
+    extra = jnp.where(
+        head_found & any_feasible,
+        cum_free[k] - head_nodes,
+        # no head -> unconstrained (vacuous: no queued jobs remain)
+        jnp.where(head_found, 0, jnp.iinfo(jnp.int32).max // 2))
+
+    # ---- pass 2: EASY backfill --------------------------------------
+    def backfill_body(i, carry):
+        free, extra, started = carry
+        j = order[i]
+        cand = queued[j] & (~started[j]) & (j != head_idx)
+        fits_now = nodes[j] <= free
+        cond_a = (now + est[j]) <= shadow_time
+        cond_b = nodes[j] <= extra
+        start = cand & fits_now & (cond_a | cond_b)
+        free = jnp.where(start, free - nodes[j], free)
+        runs_past = start & (~cond_a)
+        extra = jnp.where(runs_past, extra - nodes[j], extra)
+        started = started.at[j].set(started[j] | start)
+        return free, extra, started
+
+    free2, _, started = jax.lax.fori_loop(
+        0, max_jobs, backfill_body, (free1, extra, started1))
+
+    # ---- apply -------------------------------------------------------
+    new_jobs = jobs._replace(
+        start_t=jnp.where(started, now, jobs.start_t),
+        end_t=jnp.where(started, now + est, jobs.end_t),
+        state=jnp.where(started, RUNNING, jobs.state),
+    )
+    new_state = state._replace(jobs=new_jobs, free_nodes=free2)
+    return PassResult(
+        state=new_state,
+        started=started,
+        head_idx=jnp.where(head_found, head_idx, -1),
+        shadow_time=shadow_time,
+    )
+
+
+def schedule_pass_starts(state: SimState, policy_id) -> Tuple[jax.Array, SimState]:
+    """Convenience: (started mask, new state)."""
+    res = schedule_pass(state, policy_id)
+    return res.started, res.state

@@ -1,0 +1,126 @@
+"""Discrete-event simulation engine (§3.3).
+
+``simulate_to_drain`` runs one what-if fork: starting from the twin's
+synchronized snapshot (running jobs with predicted ends + queued jobs),
+apply one policy until the queue drains.  Future arrivals are *not*
+simulated — per §3.2, submit events cannot be predicted; the event
+horizon contains only predicted job-end events.
+
+Time advances event-to-event via ``lax.while_loop``; each iteration is
+(schedule pass) -> (advance to next predicted completion).  The loop
+bound is ``max_jobs + 1``: every iteration with a non-empty queue either
+starts jobs or retires at least one running job.
+
+The same engine also powers trace-replay mode (arrivals injected from a
+trace) used by the static-policy baselines in the benchmarks — see
+``repro/cluster/emulator.py`` which wraps it with ground-truth runtimes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backfill import schedule_pass
+from repro.core.state import DONE, QUEUED, RUNNING, SimState
+
+
+class DrainResult(NamedTuple):
+    state: SimState          # all previously-queued jobs DONE (or deadlocked)
+    first_started: jax.Array # bool (max_jobs,) — jobs started at t=now(0):
+                             # the twin's actionable decision (§3.4, 6A)
+    iters: jax.Array         # i32 — events processed
+    deadlocked: jax.Array    # bool — a queued job can never fit
+
+
+def simulate_to_drain(state: SimState, policy_id) -> DrainResult:
+    max_jobs = state.jobs.capacity
+    max_iters = max_jobs + 1
+
+    def cond(carry):
+        st, first, it, dead = carry
+        return (it < max_iters) & (~dead) & jnp.any(st.jobs.state == QUEUED)
+
+    def body(carry):
+        st, first, it, dead = carry
+        res = schedule_pass(st, policy_id)
+        st = res.state
+        # capture the decision: jobs started at the snapshot instant
+        first = jnp.where(it == 0, res.started, first)
+
+        jobs = st.jobs
+        running = jobs.state == RUNNING
+        has_queued = jnp.any(jobs.state == QUEUED)
+        ends = jnp.where(running, jobs.end_t, jnp.inf)
+        # stale predicted ends (a job "should" have finished before the
+        # snapshot instant — user estimates are inaccurate, §3.2) are
+        # processed AT the current time: virtual time never rewinds.
+        t_next = jnp.maximum(jnp.min(ends), st.now)
+        can_advance = has_queued & jnp.isfinite(t_next)
+        # a queued job that can never run (req > total nodes) -> deadlock
+        dead = dead | (has_queued & ~jnp.isfinite(t_next))
+
+        ending = running & (jobs.end_t <= t_next) & can_advance
+        freed = jnp.sum(jnp.where(ending, jobs.nodes, 0))
+        jobs = jobs._replace(
+            state=jnp.where(ending, DONE, jobs.state))
+        st = st._replace(
+            jobs=jobs,
+            free_nodes=st.free_nodes + freed,
+            now=jnp.where(can_advance, t_next, st.now),
+        )
+        return st, first, it + 1, dead
+
+    init = (state,
+            jnp.zeros((max_jobs,), dtype=bool),
+            jnp.int32(0),
+            jnp.asarray(False))
+    st, first, it, dead = jax.lax.while_loop(cond, body, init)
+    return DrainResult(state=st, first_started=first, iters=it, deadlocked=dead)
+
+
+class DrainMetrics(NamedTuple):
+    avg_wait: jax.Array
+    max_wait: jax.Array
+    avg_slowdown: jax.Array
+    max_slowdown: jax.Array
+    makespan: jax.Array
+    utilization: jax.Array
+
+
+SLOWDOWN_TAU = 10.0  # bounded-slowdown floor (seconds), standard practice
+
+
+def drain_metrics(result: DrainResult, eval_mask: jax.Array,
+                  runtime: jax.Array | None = None) -> DrainMetrics:
+    """User/system metrics over ``eval_mask`` jobs (§3.4: the jobs
+    waiting in the queue at decision time).
+
+    ``runtime`` defaults to the estimate (all the twin knows); the
+    emulator passes true runtimes when scoring *actual* outcomes.
+    """
+    jobs = result.state.jobs
+    rt = jobs.est_runtime if runtime is None else runtime
+    n = jnp.maximum(jnp.sum(eval_mask), 1)
+
+    wait = jnp.where(eval_mask, jobs.start_t - jobs.submit_t, 0.0)
+    wait = jnp.maximum(wait, 0.0)
+    sd = (wait + rt) / jnp.maximum(rt, SLOWDOWN_TAU)
+    sd = jnp.maximum(sd, 1.0)
+    sd = jnp.where(eval_mask, sd, 0.0)
+
+    makespan = jnp.max(jnp.where(eval_mask, jobs.end_t, 0.0))
+    node_seconds = jnp.sum(jnp.where(eval_mask, jobs.nodes * rt, 0.0))
+    span = jnp.maximum(
+        makespan - jnp.min(jnp.where(eval_mask, jobs.submit_t, jnp.inf)), 1e-6)
+    util = node_seconds / (result.state.total_nodes.astype(jnp.float32) * span)
+
+    return DrainMetrics(
+        avg_wait=jnp.sum(wait) / n,
+        max_wait=jnp.max(wait),
+        avg_slowdown=jnp.sum(sd) / n,
+        max_slowdown=jnp.max(jnp.where(eval_mask, sd, 1.0)),
+        makespan=makespan,
+        utilization=jnp.clip(util, 0.0, 1.0),
+    )

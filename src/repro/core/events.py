@@ -1,0 +1,102 @@
+"""Event streaming layer.
+
+The paper streams PBS hook events (``queuejob``, ``runjob``, ``jobobit``)
+through a Redis stream: the scheduler is the producer, SchedTwin the
+consumer.  This module provides an in-process event bus with the same
+stream semantics (append-only log, independent consumer offsets, replay)
+so the twin's consumption logic is identical whether the producer is our
+cluster emulator or a real scheduler hook.
+
+Events are plain host-side records — they cross the host/accelerator
+boundary only when the twin synchronizes its JAX-side mirror state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import threading
+from typing import Callable, Dict, Iterator, List, Optional
+
+
+class EventKind(enum.IntEnum):
+    """PBS-hook-equivalent event kinds (§3.1 of the paper)."""
+
+    QUEUEJOB = 0   # job submitted  (paper: hollow triangle)
+    RUNJOB = 1     # job started    (paper: half triangle)
+    JOBOBIT = 2    # job completed  (paper: filled triangle)
+    NODEFAIL = 3   # node(s) failed           (beyond paper: fault tolerance)
+    NODEUP = 4     # node(s) recovered/added  (beyond paper: elasticity)
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """A single scheduler event.
+
+    ``time`` is physical-system time in seconds.  ``job_id`` is the dense
+    job-slot index assigned at submission (also the twin's array slot).
+    ``payload`` carries kind-specific metadata (job size, walltimes, node
+    counts for NODEFAIL/NODEUP, ...).
+    """
+
+    kind: EventKind
+    time: float
+    job_id: int = -1
+    payload: Dict[str, float] = dataclasses.field(default_factory=dict)
+    seq: int = -1  # assigned by the bus on publish
+
+
+class EventBus:
+    """Append-only event log with per-consumer offsets (Redis-stream-like).
+
+    The bus is deliberately synchronous and deterministic: tests and the
+    co-simulation loop rely on replayable ordering.  A Redis-backed
+    implementation would only need to reimplement ``publish`` / ``read``.
+    """
+
+    def __init__(self) -> None:
+        self._log: List[Event] = []
+        self._offsets: Dict[str, int] = {}
+        self._seq = itertools.count()
+        self._lock = threading.Lock()
+        self._subscribers: List[Callable[[Event], None]] = []
+
+    # -- producer side -------------------------------------------------
+    def publish(self, event: Event) -> Event:
+        with self._lock:
+            stamped = dataclasses.replace(event, seq=next(self._seq))
+            self._log.append(stamped)
+        for cb in self._subscribers:
+            cb(stamped)
+        return stamped
+
+    # -- consumer side -------------------------------------------------
+    def read(self, consumer: str, max_events: Optional[int] = None) -> List[Event]:
+        """Read new events for ``consumer`` and advance its offset."""
+        with self._lock:
+            start = self._offsets.get(consumer, 0)
+            end = len(self._log) if max_events is None else min(
+                len(self._log), start + max_events)
+            out = self._log[start:end]
+            self._offsets[consumer] = end
+        return out
+
+    def subscribe(self, callback: Callable[[Event], None]) -> None:
+        """Push-mode delivery (used by the co-simulation loop)."""
+        self._subscribers.append(callback)
+
+    def replay(self) -> Iterator[Event]:
+        """Full-log replay (recovery after a twin restart)."""
+        return iter(list(self._log))
+
+    def __len__(self) -> int:
+        return len(self._log)
+
+    # -- recovery ------------------------------------------------------
+    def snapshot_offsets(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._offsets)
+
+    def restore_offsets(self, offsets: Dict[str, int]) -> None:
+        with self._lock:
+            self._offsets.update(offsets)

@@ -1,0 +1,75 @@
+"""Scheduling policy pool.
+
+A policy is a *priority key function*: lower key = scheduled earlier.
+The paper's pool (§4.1) is {WFP (ALCF utility), FCFS, SJF}, all with
+EASY backfilling.  Policy ids are ordered by the paper's tie-break
+priority WFP -> FCFS -> SJF (§4.2), so an argmin over per-policy costs
+naturally resolves ties the way the paper does.
+
+Beyond the paper we add common static policies (SAF, LJF, LXF, EXP)
+— the twin's design explicitly allows "a pool of candidate policies ...
+provided that they exhibit complementary strengths" (§3); a wider pool
+is where the vectorized what-if engine shines.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import JobTable
+
+# Canonical ids — tie-break order is numeric order (paper §4.2).
+WFP = 0    # ALCF utility: run job maximizing (wait/est)^3 * nodes
+FCFS = 1   # first-come-first-served
+SJF = 2    # shortest (estimated) job first
+# --- beyond-paper pool extensions ---
+SAF = 3    # smallest area (nodes * est) first
+LJF = 4    # longest job first
+LXF = 5    # largest expansion factor first: (wait + est) / est
+EXPF = 6   # exponential aging of wait time
+
+POLICY_NAMES = {
+    WFP: "WFP", FCFS: "FCFS", SJF: "SJF",
+    SAF: "SAF", LJF: "LJF", LXF: "LXF", EXPF: "EXPF",
+}
+PAPER_POOL: Sequence[int] = (WFP, FCFS, SJF)
+EXTENDED_POOL: Sequence[int] = (WFP, FCFS, SJF, SAF, LJF, LXF, EXPF)
+
+_EST_FLOOR = 1.0  # seconds; guards division by tiny estimates
+
+
+def priority_key(jobs: JobTable, now: jax.Array, policy_id) -> jax.Array:
+    """Per-job priority keys (lower = run first) for ``policy_id``.
+
+    Utility policies (WFP, LXF, EXPF) are re-evaluated at every
+    scheduling instance with the current wait time, exactly as a live
+    utility scheduler recomputes job scores each cycle.
+
+    Stable argsort + slot-ids-in-submission-order means ties fall back
+    to FCFS order, the conventional secondary key.
+    """
+    wait = jnp.maximum(now - jobs.submit_t, 0.0)
+    est = jnp.maximum(jobs.est_runtime, _EST_FLOOR)
+    nodes = jobs.nodes.astype(jnp.float32)
+
+    # Scores where higher = more deserving; keys are negated scores.
+    wfp_score = (wait / est) ** 3 * nodes
+    lxf_score = (wait + est) / est
+    expf_score = jnp.expm1(jnp.minimum(wait / 3600.0, 30.0))  # hourly aging
+
+    keys = jnp.stack([
+        -wfp_score,            # WFP
+        jobs.submit_t,         # FCFS
+        est,                   # SJF
+        nodes * est,           # SAF
+        -est,                  # LJF
+        -lxf_score,            # LXF
+        -expf_score,           # EXPF
+    ])
+    return keys[policy_id]
+
+
+def policy_name(policy_id: int) -> str:
+    return POLICY_NAMES[int(policy_id)]

@@ -1,0 +1,109 @@
+"""Policy scoring (§3.4) and the Kiviat/radar evaluation (§4.2).
+
+The paper's objective:
+
+    Score(p) = 0.25*maxWT(p) + 0.25*maxSD(p) + 0.25*avgWT(p) + 0.25*avgSD(p)
+
+over the jobs waiting in the queue at decision time.  All four terms are
+costs (smaller is better); we therefore *minimize* Score — the paper's
+"highest score is selected" phrasing is read as intent (best policy),
+see DESIGN.md §2.  Wait times are scored in minutes so the WT and SD
+terms live on comparable scales within one trace.
+
+Ties: identical costs are broken by policy-id order, which is the
+paper's WFP -> FCFS -> SJF priority (ids are ordered that way).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.des import DrainMetrics
+
+
+class ScoreWeights(NamedTuple):
+    max_wait: float = 0.25
+    max_slowdown: float = 0.25
+    avg_wait: float = 0.25
+    avg_slowdown: float = 0.25
+
+
+PAPER_WEIGHTS = ScoreWeights()
+_WT_SCALE = 1.0 / 60.0  # seconds -> minutes
+
+
+def policy_cost(metrics: DrainMetrics,
+                weights: ScoreWeights = PAPER_WEIGHTS) -> jax.Array:
+    """The paper's Score(p), as a cost to minimize.  Broadcasts over a
+    leading policy axis when metrics come from a vmapped what-if."""
+    return (weights.max_wait * metrics.max_wait * _WT_SCALE
+            + weights.max_slowdown * metrics.max_slowdown
+            + weights.avg_wait * metrics.avg_wait * _WT_SCALE
+            + weights.avg_slowdown * metrics.avg_slowdown)
+
+
+def select_policy(costs: jax.Array) -> jax.Array:
+    """argmin with first-occurrence tie-break = paper's priority order."""
+    return jnp.argmin(costs)
+
+
+# ----------------------------------------------------------------------
+# Kiviat (radar) chart evaluation — Figure 3.
+# ----------------------------------------------------------------------
+
+RADAR_AXES = ("avg_wait", "max_wait", "avg_slowdown", "max_slowdown",
+              "utilization")
+_COST_AXES = ("avg_wait", "max_wait", "avg_slowdown", "max_slowdown")
+
+
+def radar_normalize(per_policy: Dict[str, Dict[str, float]]) -> Dict[str, Dict[str, float]]:
+    """Min-max normalize each axis across policies so that the *best*
+    policy gets radius 1 and the worst radius 0 (paper: larger area =
+    better overall performance; FCFS measured area 0.00 => worst on all
+    axes maps to the origin)."""
+    names = list(per_policy)
+    out: Dict[str, Dict[str, float]] = {n: {} for n in names}
+    for axis in RADAR_AXES:
+        vals = np.array([per_policy[n][axis] for n in names], dtype=np.float64)
+        lo, hi = vals.min(), vals.max()
+        span = hi - lo
+        for n, v in zip(names, vals):
+            if span <= 0:
+                r = 1.0
+            elif axis in _COST_AXES:
+                r = (hi - v) / span      # lower cost -> larger radius
+            else:
+                r = (v - lo) / span      # higher utilization -> larger radius
+            out[n][axis] = float(r)
+    return out
+
+
+def radar_area(radii: Dict[str, float]) -> float:
+    """Area of the radar polygon over RADAR_AXES (unit pentagon ~ 2.38)."""
+    r = np.array([radii[a] for a in RADAR_AXES], dtype=np.float64)
+    k = len(r)
+    ang = 2.0 * np.pi / k
+    return float(0.5 * np.sin(ang) * np.sum(r * np.roll(r, -1)))
+
+
+def radar_report(per_policy: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    normed = radar_normalize(per_policy)
+    return {n: radar_area(v) for n, v in normed.items()}
+
+
+def summarize_pool(names: Sequence[str], metrics: DrainMetrics) -> Dict[str, Dict[str, float]]:
+    """Stack vmapped DrainMetrics (leading policy axis) into dicts."""
+    out = {}
+    for i, n in enumerate(names):
+        out[n] = {
+            "avg_wait": float(metrics.avg_wait[i]),
+            "max_wait": float(metrics.max_wait[i]),
+            "avg_slowdown": float(metrics.avg_slowdown[i]),
+            "max_slowdown": float(metrics.max_slowdown[i]),
+            "utilization": float(metrics.utilization[i]),
+            "makespan": float(metrics.makespan[i]),
+        }
+    return out

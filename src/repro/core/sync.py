@@ -1,0 +1,71 @@
+"""Synchronization stage (§3.2) — keep the mirror consistent with the
+physical scheduler.
+
+Event handling mirrors the paper's block ④:
+  * RUNJOB  -> insert predicted end event (start + user estimate) and
+               exit immediately (run events imply no new scheduling
+               opportunity);
+  * JOBOBIT -> pull back / push forward the predicted end to the actual
+               completion time (④A) and trigger a scheduling cycle;
+  * QUEUEJOB-> add the job to the wait queue and trigger a cycle;
+  * NODEFAIL/NODEUP -> resize capacity, requeue victims, trigger a
+               cycle (beyond paper: fault tolerance / elasticity).
+
+``resync_free_nodes`` reproduces the paper's "synchronize node
+availability using command-line tools": the mirror's free-node count is
+overwritten from the authoritative source (pbsnodes equivalent) rather
+than trusted from event replay — this makes the twin self-healing if an
+event was dropped.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.events import Event, EventKind
+from repro.core.state import (SimState, add_job, end_job, requeue_job,
+                              resize_cluster, start_job)
+
+
+def apply_event(state: SimState, ev: Event) -> Tuple[SimState, bool]:
+    """Returns (new mirror state, needs_decision_cycle)."""
+    if ev.kind == EventKind.QUEUEJOB:
+        state = add_job(
+            state, ev.job_id,
+            submit_t=jnp.float32(ev.time),
+            nodes=jnp.int32(int(ev.payload["nodes"])),
+            est_runtime=jnp.float32(ev.payload["est_runtime"]),
+        )
+        return state, True
+
+    if ev.kind == EventKind.RUNJOB:
+        # Predicted end event enters the virtual horizon; no cycle (§3.2).
+        state = start_job(state, ev.job_id, jnp.float32(ev.time))
+        return state, False
+
+    if ev.kind == EventKind.JOBOBIT:
+        # ④A pull-back (early finish) or push-forward (cleanup delay):
+        # the predicted end is replaced with the actual one.
+        state = end_job(state, ev.job_id, jnp.float32(ev.time))
+        return state, True
+
+    if ev.kind == EventKind.NODEFAIL:
+        state = resize_cluster(state, -jnp.int32(int(ev.payload["nodes"])))
+        victim = int(ev.payload.get("victim_job", -1))
+        if victim >= 0:
+            state = requeue_job(state, victim, jnp.float32(ev.time))
+        state = state._replace(now=jnp.maximum(state.now, jnp.float32(ev.time)))
+        return state, True
+
+    if ev.kind == EventKind.NODEUP:
+        state = resize_cluster(state, jnp.int32(int(ev.payload["nodes"])))
+        state = state._replace(now=jnp.maximum(state.now, jnp.float32(ev.time)))
+        return state, True
+
+    raise ValueError(f"unknown event kind: {ev.kind}")
+
+
+def resync_free_nodes(state: SimState, authoritative_free: int) -> SimState:
+    """Overwrite mirror free-node count from the physical system."""
+    return state._replace(free_nodes=jnp.int32(authoritative_free))

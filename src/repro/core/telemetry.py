@@ -1,0 +1,61 @@
+"""Twin telemetry: per-cycle latency, decisions, policy mix (Table 1)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class CycleRecord:
+    time: float                # virtual (cluster) time of the cycle
+    wall_seconds: float        # host wall time of the decision
+    policy: str                # winning policy name
+    costs: Dict[str, float]    # per-policy cost
+    n_started: int             # jobs qrun this cycle
+    started_jobs: List[int]
+
+
+@dataclasses.dataclass
+class Telemetry:
+    cycles: List[CycleRecord] = dataclasses.field(default_factory=list)
+    # job_id -> policy that started it (paper Table 1 attributes each
+    # *job start* to the policy selected in that cycle)
+    job_start_policy: Dict[int, str] = dataclasses.field(default_factory=dict)
+
+    def record(self, rec: CycleRecord) -> None:
+        self.cycles.append(rec)
+        for j in rec.started_jobs:
+            self.job_start_policy[j] = rec.policy
+
+    # ---- Table 1 ------------------------------------------------------
+    def policy_start_distribution(self) -> Dict[str, float]:
+        """Percentage of job starts attributed to each policy."""
+        total = max(len(self.job_start_policy), 1)
+        counts: Dict[str, int] = {}
+        for p in self.job_start_policy.values():
+            counts[p] = counts.get(p, 0) + 1
+        return {p: 100.0 * c / total for p, c in sorted(counts.items())}
+
+    # ---- overhead (paper: "a few seconds per scheduling cycle") -------
+    def cycle_latency_stats(self) -> Dict[str, float]:
+        if not self.cycles:
+            return {"mean_s": 0.0, "max_s": 0.0, "p50_s": 0.0, "n": 0}
+        ws = sorted(c.wall_seconds for c in self.cycles)
+        n = len(ws)
+        return {
+            "mean_s": sum(ws) / n,
+            "max_s": ws[-1],
+            "p50_s": ws[n // 2],
+            "n": n,
+        }
+
+
+class StopWatch:
+    def __enter__(self) -> "StopWatch":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> Optional[bool]:
+        self.seconds = time.perf_counter() - self._t0
+        return None

@@ -1,0 +1,135 @@
+"""SchedTwin orchestrator — the simulation-in-the-loop digital twin.
+
+Wires together the paper's workflow (Figure 2):
+
+  ① physical event --> ② produced onto the event bus -->
+  ③ twin consumes --> ④ synchronization (sync.py) -->
+  ⑤ parallel what-if DES (whatif.py) --> ⑥ policy selection
+  (scoring.py) --> ⑥A extract next job-run events -->
+  ⑦ decision feedback: ``qrun`` the selected jobs.
+
+The twin never sees true runtimes — only user estimates and actual
+completion events as they occur, exactly the information a production
+PBS deployment exposes.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sync, telemetry, whatif
+from repro.core.events import Event, EventBus, EventKind
+from repro.core.policies import PAPER_POOL, policy_name
+from repro.core.scoring import PAPER_WEIGHTS, ScoreWeights
+from repro.core.state import SimState, empty_state
+
+
+class SchedTwin:
+    """Real-time digital twin for adaptive scheduling.
+
+    Parameters
+    ----------
+    bus : EventBus
+        Stream carrying scheduler hook events (②→③).
+    qrun : callable(list[int], float) -> None
+        Decision feedback into the physical system (⑦) — the PBS
+        ``qrun <jobid>`` equivalent, supplied by the cluster emulator
+        (or by a real PBS adapter).
+    free_nodes_probe : callable() -> int, optional
+        Authoritative node-availability probe (§3.2's "command-line
+        tools"); when given, the mirror's free count is resynced before
+        every decision.
+    pool : sequence of policy ids, tie-break order (default: paper's
+        WFP, FCFS, SJF).
+    ensemble : if > 1, use uncertainty-ensemble decisions (beyond paper).
+    """
+
+    CONSUMER = "schedtwin"
+
+    def __init__(self,
+                 bus: EventBus,
+                 qrun: Callable[[List[int], float], None],
+                 total_nodes: int,
+                 max_jobs: int = 256,
+                 pool: Sequence[int] = PAPER_POOL,
+                 weights: ScoreWeights = PAPER_WEIGHTS,
+                 free_nodes_probe: Optional[Callable[[], int]] = None,
+                 ensemble: int = 1,
+                 ensemble_noise: float = 0.3,
+                 seed: int = 0) -> None:
+        self.bus = bus
+        self.qrun = qrun
+        self.pool_ids = list(pool)
+        self.pool = jnp.asarray(self.pool_ids, dtype=jnp.int32)
+        self.weights = weights
+        self.state: SimState = empty_state(max_jobs, total_nodes)
+        self.telemetry = telemetry.Telemetry()
+        self.free_nodes_probe = free_nodes_probe
+        self.ensemble = ensemble
+        self.ensemble_noise = ensemble_noise
+        self._key = jax.random.PRNGKey(seed)
+
+    # ------------------------------------------------------------------
+    def pump(self) -> int:
+        """③ consume pending events; run a decision cycle if any event
+        opened a scheduling opportunity.  Returns #events consumed."""
+        events = self.bus.read(self.CONSUMER)
+        needs_cycle = False
+        t_latest = float(self.state.now)
+        for ev in events:
+            self.state, cycle = sync.apply_event(self.state, ev)
+            needs_cycle |= cycle
+            t_latest = max(t_latest, ev.time)
+        if needs_cycle:
+            self._decision_cycle(t_latest)
+        return len(events)
+
+    def on_event(self, ev: Event) -> None:
+        """Push-mode entry point (bus.subscribe)."""
+        self.bus.read(self.CONSUMER)  # keep offset in step with pushes
+        self.state, needs_cycle = sync.apply_event(self.state, ev)
+        if needs_cycle:
+            self._decision_cycle(ev.time)
+
+    # ------------------------------------------------------------------
+    def _decision_cycle(self, t: float) -> None:
+        """④→⑦ : sync, simulate, select, feed back."""
+        if self.free_nodes_probe is not None:
+            self.state = sync.resync_free_nodes(
+                self.state, self.free_nodes_probe())
+
+        with telemetry.StopWatch() as sw:
+            if self.ensemble > 1:
+                self._key, sub = jax.random.split(self._key)
+                decision = whatif.decide_ensemble(
+                    self.state, self.pool, sub,
+                    n_ens=self.ensemble, noise=self.ensemble_noise,
+                    weights=self.weights)
+            else:
+                decision = whatif.decide(self.state, self.pool,
+                                         weights=self.weights)
+            run_mask = np.asarray(decision.run_mask)  # blocks for timing
+
+        job_ids = [int(j) for j in np.nonzero(run_mask)[0]]
+        winner = policy_name(self.pool_ids[int(decision.policy_index)])
+        costs = {policy_name(pid): float(c)
+                 for pid, c in zip(self.pool_ids, np.asarray(decision.costs))}
+        self.telemetry.record(telemetry.CycleRecord(
+            time=t, wall_seconds=sw.seconds, policy=winner,
+            costs=costs, n_started=len(job_ids), started_jobs=job_ids))
+
+        if job_ids:
+            # ⑦ qrun — the physical system will emit RUNJOB events that
+            # flow back through the bus and insert predicted-end events.
+            self.qrun(job_ids, t)
+
+    # ------------------------------------------------------------------
+    def recover(self) -> None:
+        """Rebuild the mirror from a full bus replay (twin restart)."""
+        self.state = empty_state(self.state.jobs.capacity,
+                                 int(self.state.total_nodes))
+        for ev in self.bus.replay():
+            self.state, _ = sync.apply_event(self.state, ev)

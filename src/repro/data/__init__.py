@@ -1,0 +1,4 @@
+"""Data substrate: deterministic synthetic pipeline."""
+from repro.data.pipeline import DataConfig, SyntheticLM, host_slice, prefetch
+
+__all__ = ["DataConfig", "SyntheticLM", "host_slice", "prefetch"]

@@ -1,0 +1,110 @@
+"""Deterministic synthetic data pipeline.
+
+Produces language-model batches with a reproducible structure-bearing
+distribution (a small-order Markov chain over the vocab, so the loss
+actually decreases during the end-to-end example runs — uniform random
+tokens would pin the loss at log V).
+
+Sharding: ``host_slice`` gives each host its slice of the global batch
+(process_index-based) so the same pipeline works under multi-host
+pjit; on one host it is the identity.  ``prefetch`` overlaps host-side
+generation with device compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    markov_order: int = 1
+    branch: int = 32        # out-degree of the markov chain
+
+
+class SyntheticLM:
+    """Markov-chain token stream, deterministic per (seed, step, row)."""
+
+    def __init__(self, cfg: DataConfig) -> None:
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab_size
+        # each state has `branch` allowed successors with dirichlet probs
+        self._succ = rng.integers(0, v, size=(v, cfg.branch))
+        p = rng.dirichlet(np.ones(cfg.branch) * 0.5, size=v)
+        self._cum = np.cumsum(p, axis=-1).astype(np.float32)
+
+    def _row(self, rng: np.random.Generator) -> np.ndarray:
+        cfg = self.cfg
+        out = np.empty(cfg.seq_len + 1, dtype=np.int32)
+        s = int(rng.integers(0, cfg.vocab_size))
+        u = rng.random(cfg.seq_len + 1).astype(np.float32)
+        for t in range(cfg.seq_len + 1):
+            out[t] = s
+            k = int(np.searchsorted(self._cum[s], u[t]))
+            s = int(self._succ[s, min(k, cfg.branch - 1)])
+        return out
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        toks = np.empty((cfg.global_batch, cfg.seq_len + 1), dtype=np.int32)
+        for b in range(cfg.global_batch):
+            rng = np.random.default_rng(
+                (cfg.seed, step, b))  # content-addressed: restart-safe
+            toks[b] = self._row(rng)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+            "mask": np.ones((cfg.global_batch, cfg.seq_len), dtype=np.int32),
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def host_slice(batch: Dict[str, np.ndarray],
+               process_index: Optional[int] = None,
+               process_count: Optional[int] = None
+               ) -> Dict[str, np.ndarray]:
+    """This host's rows of the global batch (contiguous block split)."""
+    pi = jax.process_index() if process_index is None else process_index
+    pc = jax.process_count() if process_count is None else process_count
+    def cut(x: np.ndarray) -> np.ndarray:
+        b = x.shape[0]
+        assert b % pc == 0, (b, pc)
+        per = b // pc
+        return x[pi * per:(pi + 1) * per]
+    return {k: cut(v) for k, v in batch.items()}
+
+
+def prefetch(it: Iterator, depth: int = 2) -> Iterator:
+    """Background-thread prefetch (overlap host datagen with compute)."""
+    q: "queue.Queue" = queue.Queue(maxsize=depth)
+    _END = object()
+
+    def worker() -> None:
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(_END)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is _END:
+            return
+        yield item

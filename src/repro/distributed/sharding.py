@@ -1,0 +1,136 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Every parameter in a model's param table carries *logical* axis names
+(("d_model", "d_ff"), ("experts", "d_model", "d_ff"), ...).  A
+``ShardingRules`` maps logical names to mesh axes; unknown/None axes
+replicate.  Divisibility is checked per-tensor: a logical rule that
+does not divide the concrete dim falls back to replication (e.g. GQA
+kv_heads=8 on a model axis of 16 — the KV heads stay replicated and
+the sequence axis carries the parallelism instead).
+
+Strategies
+----------
+``fsdp_tp``   (train default)  params: d_model->fsdp axes, d_ff/heads/
+              vocab/experts->model; activations: batch->dp axes,
+              seq->model (Megatron-style sequence parallelism between
+              blocks).
+``dp_tp``     params replicated over data (pure DP + TP).
+``decode``    like fsdp_tp but KV cache sequence axis -> model
+              (flash-decode style distributed attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamTable
+
+MeshAxes = Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of axes, or None)."""
+    rules: Dict[str, Optional[Tuple[str, ...]]]
+    mesh: Mesh
+
+    def spec_for(self, logical_axes: Tuple[Optional[str], ...],
+                 shape: Tuple[int, ...]) -> P:
+        parts = []
+        used: set = set()
+        for dim, name in zip(shape, logical_axes):
+            axes = self.rules.get(name) if name else None
+            if axes is None:
+                parts.append(None)
+                continue
+            axes = tuple(a for a in axes if a in self.mesh.shape
+                         and a not in used)
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            if axes and dim % size == 0 and dim > 0:
+                parts.append(axes if len(axes) > 1 else axes[0])
+                used.update(axes)
+            else:
+                parts.append(None)  # non-divisible -> replicate
+        return P(*parts)
+
+    def sharding_for(self, logical_axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, shape))
+
+    def table_shardings(self, table: ParamTable) -> Dict[str, NamedSharding]:
+        return {name: self.sharding_for(axes, shape)
+                for name, (shape, axes) in table.items()}
+
+    def constraint(self, x: jax.Array,
+                   *logical_axes: Optional[str]) -> jax.Array:
+        """with_sharding_constraint by logical axis names."""
+        spec = self.spec_for(tuple(logical_axes), x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def make_rules(mesh: Mesh, strategy: str = "fsdp_tp") -> ShardingRules:
+    dp = _dp_axes(mesh)
+    model = ("model",) if "model" in mesh.shape else ()
+
+    if strategy == "fsdp_tp":
+        rules = {
+            # --- parameters ---
+            "d_model": dp,            # FSDP shard of the big dims
+            "d_ff": model,            # TP
+            "heads": model,
+            "kv_heads": model,        # falls back to replicate if ¬divisible
+            "head_dim": None,
+            "vocab": model,
+            "experts": model,         # EP
+            "rnn": model,
+            "layers": None,
+            # --- activations ---
+            "batch": dp,
+            "seq": model,             # sequence parallelism between blocks
+            "act_heads": model,       # attention compute sharded by heads
+            "act_kv_heads": model,
+            "kv_seq": None,           # train/prefill KV seq replicated
+            "act_d_model": None,
+            "act_d_ff": model,
+            "act_vocab": model,
+            "act_experts": model,
+        }
+    elif strategy == "dp_tp":
+        rules = {
+            "d_model": None, "d_ff": model, "heads": model,
+            "kv_heads": model, "head_dim": None, "vocab": model,
+            "experts": model, "rnn": model, "layers": None,
+            "batch": dp, "seq": None, "act_heads": model,
+            "act_kv_heads": model, "kv_seq": None, "act_d_model": None,
+            "act_d_ff": model, "act_vocab": model, "act_experts": model,
+        }
+    elif strategy == "decode":
+        rules = {
+            "d_model": dp, "d_ff": model, "heads": model,
+            "kv_heads": model, "head_dim": None, "vocab": model,
+            "experts": model, "rnn": model, "layers": None,
+            "batch": dp, "seq": None,
+            "act_heads": model, "act_kv_heads": model,
+            # the KV cache's sequence axis carries model parallelism:
+            # distributed flash-decode (XLA inserts masked max/sum
+            # all-reduces for the softmax over the sharded axis)
+            "kv_seq": model,
+            "act_d_model": None, "act_d_ff": model, "act_vocab": model,
+            "act_experts": model,
+        }
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return ShardingRules(rules=rules, mesh=mesh)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical layers.
+
+policy_eval      — the paper's scheduling-pass hot spot (policy-batched)
+flash_attention  — train/prefill attention (online softmax, GQA-aware)
+wkv6             — RWKV6 recurrence (VMEM-resident state)
+rglru            — RG-LRU gated linear scan
+
+Wrappers in ops.py; pure-jnp oracles in ref.py; interpret-mode sweeps
+in tests/test_kernels_*.py.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``INTERPRET`` defaults to True (this container is CPU-only; interpret
+mode executes kernel bodies in Python for correctness).  On real TPU
+set ``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False)
+to run the compiled kernels.
+
+``twin_schedule_pass`` is the drop-in replacement for the pure-jnp
+``core.backfill.schedule_pass`` inside the what-if engine: it takes a
+SimState + policy pool and returns the per-policy started masks.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import SimState
+from repro.kernels import flash_attention as _fa
+from repro.kernels import policy_eval as _pe
+from repro.kernels import rglru as _rg
+from repro.kernels import wkv6 as _wkv
+from repro.kernels.ref import kernel_inputs_from_state
+
+INTERPRET = True
+
+
+def twin_schedule_pass(state: SimState, pool: jax.Array,
+                       interpret: bool | None = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Policy-batched scheduling pass (paper hot spot).
+
+    Returns (started (k, J) i32, free_after (k,) f32)."""
+    inp = kernel_inputs_from_state(state, pool)
+    return _pe.policy_eval_pass(
+        inp["order"], inp["queued"], inp["nodes"], inp["est"],
+        inp["run_end"], inp["run_nodes"], inp["free0"], inp["now"],
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=None, block_k=None,
+                    scale=None, interpret=None):
+    kwargs = {}
+    if block_q is not None:
+        kwargs["block_q"] = block_q
+    if block_k is not None:
+        kwargs["block_k"] = block_k
+    return _fa.flash_attention(
+        q, k, v, causal=causal, scale=scale,
+        interpret=INTERPRET if interpret is None else interpret, **kwargs)
+
+
+def wkv6(r, k, v, w, u, *, block_t=None, interpret=None):
+    kwargs = {}
+    if block_t is not None:
+        kwargs["block_t"] = block_t
+    return _wkv.wkv6(r, k, v, w, u,
+                     interpret=INTERPRET if interpret is None else interpret,
+                     **kwargs)
+
+
+def rglru(a, x, h0, *, block_t=None, block_w=None, interpret=None):
+    kwargs = {}
+    if block_t is not None:
+        kwargs["block_t"] = block_t
+    if block_w is not None:
+        kwargs["block_w"] = block_w
+    return _rg.rglru(a, x, h0,
+                     interpret=INTERPRET if interpret is None else interpret,
+                     **kwargs)

@@ -1,0 +1,164 @@
+"""Pallas TPU kernel for the scheduling pass — the paper's hot spot.
+
+Every SchedTwin cycle runs k drain simulations; each simulation runs a
+*scheduling pass* (priority order + greedy starts + EASY backfill) at
+every event.  The paper parallelizes this with k CQSim processes on 48
+CPU cores; the TPU-native adaptation is a **policy-batched kernel**:
+
+  * grid = the policy/ensemble axis (one program per candidate policy),
+  * the queue state (<= max_jobs jobs x 6 f32 fields, ~6 KB at J=256)
+    is VMEM-resident for the whole pass,
+  * the inherently sequential greedy/backfill dependence is an
+    in-kernel ``fori_loop`` over priority ranks,
+  * the EASY "shadow time" is computed WITHOUT the CPU algorithm's
+    sort: for every candidate end time t_j we evaluate
+    ``free_at(t_j) = free + sum(nodes_r * (end_r <= t_j))`` — an O(J^2)
+    SIMD broadcast that replaces an O(J log J) sort-scan, which is the
+    right trade on the VPU (J^2 = 64K lanes of work, zero data
+    movement).  See DESIGN.md §2 (hardware adaptation).
+
+The priority *keys* are computed (and argsorted) outside the kernel —
+they are embarrassingly parallel and XLA already fuses them; the kernel
+owns the sequential part.
+
+Inputs (policy axis k leading where applicable):
+  order     (k, J) i32   — job slots in priority order (invalid last)
+  queued    (J,)   i32   — 1 if job is QUEUED
+  nodes     (J,)   f32   — node request per job
+  est       (J,)   f32   — user walltime estimate
+  run_end   (J,)   f32   — predicted end for RUNNING jobs else +inf
+  run_nodes (J,)   f32   — nodes held by RUNNING jobs else 0
+  free0     (1, 1) f32   — free nodes now
+  now       (1, 1) f32   — current time
+
+Outputs:
+  started (k, J) i32 — jobs started by this pass under each policy
+  free    (k, 1) f32 — free nodes after the pass
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1.0
+BIG = 3.0e38  # ~f32 inf stand-in (pallas-friendly)
+
+
+def _pass_kernel(order_ref, queued_ref, nodes_ref, est_ref,
+                 run_end_ref, run_nodes_ref, free_ref, now_ref,
+                 started_ref, free_out_ref):
+    """One scheduling pass for ONE policy (grid dim 0 = policy)."""
+    order = order_ref[0, :]          # (J,) i32 priority-ranked job ids
+    queued = queued_ref[0, :]        # (J,) i32
+    nodes = nodes_ref[0, :]          # (J,) f32
+    est = est_ref[0, :]
+    run_end = run_end_ref[0, :]
+    run_nodes = run_nodes_ref[0, :]
+    free0 = free_ref[0, 0]
+    now = now_ref[0, 0]
+    j_cap = order.shape[0]
+
+    q_nodes = jnp.where(queued > 0, nodes, BIG)  # invalid jobs never fit
+
+    # ---- pass 1: greedy in priority order (sequential) ---------------
+    def greedy(i, carry):
+        free, head_rank, started = carry
+        j = order[i]
+        fits = q_nodes[j] <= free
+        no_head = head_rank < 0
+        can_start = fits & no_head
+        is_queued = queued[j] > 0
+        free = jnp.where(can_start & is_queued, free - nodes[j], free)
+        started = jnp.where(can_start & is_queued,
+                            started.at[j].set(1), started)
+        blocked = is_queued & (~fits) & no_head
+        head_rank = jnp.where(blocked, i, head_rank)
+        return free, head_rank, started
+
+    started0 = jnp.zeros((j_cap,), dtype=jnp.int32)
+    free1, head_rank, started1 = jax.lax.fori_loop(
+        0, j_cap, greedy, (free0, jnp.int32(-1), started0))
+
+    head = order[jnp.maximum(head_rank, 0)]
+    has_head = head_rank >= 0
+    head_nodes = jnp.where(has_head, nodes[head], 0.0)
+
+    # ---- shadow time without a sort (O(J^2) SIMD) ---------------------
+    # running set = RUNNING jobs + jobs started in pass 1 (their end is
+    # now + estimate; the twin never sees true runtimes).
+    end_eff = jnp.where(started1 > 0, now + est, run_end)       # (J,)
+    nodes_eff = jnp.where(started1 > 0, nodes, run_nodes)       # (J,)
+    # free_at[i] = free1 + sum_j nodes_eff[j] * (end_eff[j] <= end_eff[i])
+    le = (end_eff[None, :] <= end_eff[:, None]).astype(jnp.float32)
+    free_at = free1 + le @ nodes_eff                            # (J,)
+    feasible = (free_at >= head_nodes) & (end_eff < BIG)
+    t_cand = jnp.where(feasible, end_eff, BIG)
+    shadow = jnp.where(has_head, jnp.min(t_cand), BIG)
+    at_shadow = feasible & (end_eff <= shadow)
+    extra_raw = jnp.max(jnp.where(at_shadow, free_at, -BIG)) - head_nodes
+    extra = jnp.where(has_head,
+                      jnp.where(jnp.any(at_shadow), extra_raw, 0.0),
+                      BIG)
+
+    # ---- pass 2: EASY backfill (sequential) ---------------------------
+    def backfill(i, carry):
+        free, extra, started = carry
+        j = order[i]
+        cand = (queued[j] > 0) & (started[j] == 0) & (i != head_rank)
+        fits_now = nodes[j] <= free
+        cond_a = (now + est[j]) <= shadow
+        cond_b = nodes[j] <= extra
+        start = cand & fits_now & (cond_a | cond_b)
+        free = jnp.where(start, free - nodes[j], free)
+        extra = jnp.where(start & (~cond_a), extra - nodes[j], extra)
+        started = jnp.where(start, started.at[j].set(1), started)
+        return free, extra, started
+
+    free2, _, started = jax.lax.fori_loop(
+        0, j_cap, backfill, (free1, extra, started1))
+
+    started_ref[0, :] = started
+    free_out_ref[0, 0] = free2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def policy_eval_pass(order: jax.Array, queued: jax.Array,
+                     nodes: jax.Array, est: jax.Array,
+                     run_end: jax.Array, run_nodes: jax.Array,
+                     free0: jax.Array, now: jax.Array,
+                     *, interpret: bool = True):
+    """Batched scheduling pass: ``order`` is (k, J); the rest (J,).
+
+    Returns (started (k, J) i32, free (k,) f32).  ``interpret=True``
+    runs the kernel body on CPU (this container); on TPU pass False.
+    """
+    k, j_cap = order.shape
+    f32 = jnp.float32
+
+    shared = lambda: pl.BlockSpec((1, j_cap), lambda p: (0, 0))  # noqa: E731
+    per_policy = lambda: pl.BlockSpec((1, j_cap), lambda p: (p, 0))  # noqa: E731
+    scalar = lambda: pl.BlockSpec((1, 1), lambda p: (0, 0))  # noqa: E731
+
+    started, free = pl.pallas_call(
+        _pass_kernel,
+        grid=(k,),
+        in_specs=[per_policy(), shared(), shared(), shared(), shared(),
+                  shared(), scalar(), scalar()],
+        out_specs=[per_policy(), pl.BlockSpec((1, 1), lambda p: (p, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, j_cap), jnp.int32),
+            jax.ShapeDtypeStruct((k, 1), f32),
+        ],
+        interpret=interpret,
+    )(order,
+      queued.reshape(1, j_cap).astype(jnp.int32),
+      nodes.reshape(1, j_cap).astype(f32),
+      est.reshape(1, j_cap).astype(f32),
+      run_end.reshape(1, j_cap).astype(f32),
+      run_nodes.reshape(1, j_cap).astype(f32),
+      free0.reshape(1, 1).astype(f32),
+      now.reshape(1, 1).astype(f32))
+    return started, free[:, 0]

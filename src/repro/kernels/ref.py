@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each function computes exactly what its kernel computes, with plain
+jax.numpy (no pallas) — the tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policies
+from repro.core.backfill import schedule_pass
+from repro.core.state import QUEUED, RUNNING, SimState
+from repro.models.attention import full_attention
+from repro.models.blocks_rnn import rglru_scan, wkv_scan
+
+
+# ---------------------------------------------------------------------
+# policy_eval oracle: the vectorized schedule_pass from core/backfill.
+# ---------------------------------------------------------------------
+
+def policy_eval_ref(state: SimState, pool: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """(started (k, J) i32, free_after (k,) f32) via core.schedule_pass."""
+    def one(pid):
+        res = schedule_pass(state, pid)
+        return res.started.astype(jnp.int32), \
+            res.state.free_nodes.astype(jnp.float32)
+    started, free = jax.vmap(one)(pool)
+    return started, free
+
+
+def kernel_inputs_from_state(state: SimState, pool: jax.Array):
+    """Build the policy_eval kernel's input arrays from a SimState."""
+    jobs = state.jobs
+    queued = (jobs.state == QUEUED).astype(jnp.int32)
+    running = jobs.state == RUNNING
+    keys = jax.vmap(
+        lambda pid: policies.priority_key(jobs, state.now, pid))(pool)
+    keys = jnp.where(queued[None, :] > 0, keys, jnp.inf)
+    order = jnp.argsort(keys, axis=1).astype(jnp.int32)
+    return dict(
+        order=order,
+        queued=queued,
+        nodes=jobs.nodes.astype(jnp.float32),
+        est=jobs.est_runtime.astype(jnp.float32),
+        run_end=jnp.where(running, jobs.end_t, jnp.inf).astype(jnp.float32),
+        run_nodes=jnp.where(running, jobs.nodes, 0).astype(jnp.float32),
+        free0=state.free_nodes.astype(jnp.float32),
+        now=state.now.astype(jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------
+# flash attention oracle
+# ---------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    return full_attention(q, k, v, causal=causal, scale=scale,
+                          q_block=max(q.shape[2] // 4, 1))
+
+
+# ---------------------------------------------------------------------
+# recurrence oracles
+# ---------------------------------------------------------------------
+
+def wkv6_ref(r, k, v, w, u):
+    """(y (B,S,H,N), state (B,H,N,N)) via blocks_rnn.wkv_scan."""
+    b, s, h, n = r.shape
+    state0 = jnp.zeros((b, h, n, n), dtype=jnp.float32)
+    state, y = wkv_scan(state0, r, k, v, w, u)
+    return y, state
+
+
+def rglru_ref(a, x, h0):
+    """(h_all (B,S,W), h_final (B,W)) via blocks_rnn.rglru_scan."""
+    hT, h = rglru_scan(a, x, h0)
+    return h, hT

@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell this lowers + compiles the
+right step function (``train_step`` for train cells, ``prefill`` for
+prefill cells, ``serve_step``/decode for decode cells) against the
+production mesh — single-pod (16, 16) = 256 chips and multi-pod
+(2, 16, 16) = 512 chips — using abstract ShapeDtypeStruct inputs (no
+allocation).  It records ``memory_analysis()`` (fits?),
+``cost_analysis()`` (FLOPs/bytes) and the collective bytes parsed from
+the optimized HLO, which together feed EXPERIMENTS.md §Dry-run and
+§Roofline.
+
+Usage::
+
+    python -m repro.launch.dryrun --arch granite-20b --shape train_4k \
+        --mesh single --out results/dryrun
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+    python -m repro.launch.dryrun --all --subprocess   # isolate cells
+
+NOTE: the two ``os.environ`` lines above MUST run before any jax
+import (jax locks the device count on first init).  This module is the
+only place that forces 512 host devices — tests and benchmarks see the
+real device count.
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import SHAPES, SHAPE_ORDER, cell_applicable, get_config
+from repro.configs.registry import ARCH_ORDER
+from repro.distributed.sharding import make_rules
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import cell_inputs
+from repro.models import api
+from repro.models.common import count_params
+from repro.serve.engine import jit_decode_step
+from repro.train.train_step import jit_train_step
+
+
+def _active_param_fraction(cfg) -> float:
+    """MoE: fraction of params active per token (shared+top_k experts)."""
+    if cfg.family != "moe":
+        return 1.0
+    table = api.param_table(cfg)
+    expert = sum(
+        int(_prod(shape)) for name, (shape, _) in table.items()
+        if ".moe.w_" in name or name.startswith("moe.w_"))
+    total = count_params(table)
+    m = cfg.moe
+    return (total - expert + expert * m.top_k / m.n_experts) / total
+
+
+def _prod(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Build mesh + jitted fn + abstract args and ``.lower()`` the cell."""
+    cell = SHAPES[shape_name]
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = cell_inputs(arch, cell, cfg)
+
+    with mesh:
+        if spec.kind == "train":
+            rules = make_rules(mesh, "fsdp_tp")
+            fn = jit_train_step(cfg, rules)
+            lowered = fn.lower(*spec.args)
+        elif spec.kind == "prefill":
+            rules = make_rules(mesh, "fsdp_tp")
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.train.train_step import batch_shardings
+
+            def prefill_fn(params, batch):
+                return api.prefill(cfg, rules, params, batch)
+
+            param_sh = rules.table_shardings(api.param_table(cfg))
+            bs = batch_shardings(cfg, rules)
+            bs = {k: v for k, v in bs.items() if k in spec.args[1]}
+            fn = jax.jit(prefill_fn, in_shardings=(param_sh, bs))
+            lowered = fn.lower(*spec.args)
+        else:  # decode
+            rules = make_rules(mesh, "decode")
+            fn = jit_decode_step(cfg, rules, spec.args[1])
+            lowered = fn.lower(*spec.args)
+    return lowered, mesh, cfg, cell
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             want_roofline: bool = True) -> Dict:
+    """Lower + compile one cell; return the §Dry-run record."""
+    cell = SHAPES[shape_name]
+    cfg = get_config(arch)
+    rec: Dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": cell.kind,
+        "status": "",
+    }
+    if not cell_applicable(shape_name, cfg.supports_long_context):
+        rec["status"] = "skipped"
+        rec["skip_reason"] = ("full quadratic attention at 500k context; "
+                              "see DESIGN.md §4")
+        return rec
+
+    t0 = time.time()
+    lowered, mesh, cfg, cell = lower_cell(arch, shape_name, multi_pod)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    n_dev = 512 if multi_pod else 256
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        arg = int(getattr(mem, "argument_size_in_bytes", 0))
+        out = int(getattr(mem, "output_size_in_bytes", 0))
+        tmp = int(getattr(mem, "temp_size_in_bytes", 0))
+        ali = int(getattr(mem, "alias_size_in_bytes", 0))
+        peak = int(getattr(mem, "peak_memory_in_bytes", 0))
+        rec["memory"] = {
+            "argument_bytes": arg, "output_bytes": out,
+            "temp_bytes": tmp, "alias_bytes": ali,
+            # live = args + temps + non-aliased outputs; `peak` from XLA
+            # can under-report argument residency on CPU
+            "peak_bytes_per_device": max(peak, arg + tmp + max(out - ali, 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    if want_roofline:
+        text = compiled.as_text()
+        rl = hlo_analysis.roofline_from_compiled(compiled, text)
+        n_params = count_params(api.param_table(cfg))
+        # input-embedding rows do no matmul FLOPs (pure gather); with
+        # tied embeddings the table still earns its flops in the
+        # unembed dot, so only UNtied input tables are excluded.
+        if not cfg.tie_embeddings:
+            n_params -= cfg.vocab_size * cfg.d_model
+        act = _active_param_fraction(cfg)
+        if cell.kind == "train":
+            tokens = cell.global_batch * cell.seq_len
+            mf = hlo_analysis.model_flops_train(n_params, tokens, act)
+        elif cell.kind == "prefill":
+            tokens = cell.global_batch * cell.seq_len
+            mf = 2.0 * n_params * act * tokens
+        else:
+            mf = hlo_analysis.model_flops_decode(
+                n_params, cell.global_batch, act)
+        rl.finalize(model_flops=mf / n_dev)   # per-device useful flops
+        rec["roofline"] = rl.to_dict()
+        rec["n_params"] = n_params
+        rec["active_frac"] = act
+        del text
+    return rec
+
+
+def fmt_cell(rec: Dict) -> str:
+    if rec["status"] == "skipped":
+        return (f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+                f"SKIP ({rec['skip_reason'][:40]}...)")
+    r = rec.get("roofline", {})
+    mem = rec.get("memory", {})
+    peak = mem.get("peak_bytes_per_device", 0) / 2**30
+    return (f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+            f"ok  compile={rec['compile_s']:6.1f}s "
+            f"peak={peak:6.2f}GiB/dev "
+            f"Tc={r.get('t_compute', 0)*1e3:8.2f}ms "
+            f"Tm={r.get('t_memory', 0)*1e3:8.2f}ms "
+            f"Tcoll={r.get('t_collective', 0)*1e3:8.2f}ms "
+            f"bound={r.get('bottleneck','-'):10s} "
+            f"useful={r.get('useful_ratio', 0)*100:5.1f}%")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in its own process (isolation)")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    archs = list(ARCH_ORDER) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPE_ORDER) if args.all or not args.shape \
+        else [args.shape]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        rec = json.load(f)
+                    print("cached:", fmt_cell(rec))
+                    continue
+                if args.subprocess:
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--mesh", "multi" if multi else "single",
+                           "--out", args.out]
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures += 1
+                    continue
+                try:
+                    rec = run_cell(arch, shape, multi)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(fmt_cell(rec) if rec["status"] != "error"
+                      else f"{arch:24s} {shape:12s} ERROR {rec['error'][:80]}")
+                jax.clear_caches()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION — importing this module never
+touches jax device state.  Single pod = (data=16, model=16) over 256
+chips (TPU v5e pod); multi-pod adds a leading ``pod`` axis (2 pods =
+512 chips).  The ``pod`` axis defaults to extra data parallelism
+(FSDP over ('pod','data')); the sharding rules in
+``repro/distributed/sharding.py`` treat ('pod','data') as the DP axes
+everywhere, so the same model code runs on either mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Generic builder (tests / degraded-fleet elastic re-mesh)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: Optional[int] = None) -> Mesh:
+    """Whatever this host has (CPU smoke tests: 1 device)."""
+    n = len(jax.devices())
+    m = model or 1
+    assert n % m == 0
+    return make_mesh((n // m, m), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) — the roofline denominators.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link

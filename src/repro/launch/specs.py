@@ -1,0 +1,98 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStruct stand-ins for
+every model input — weak-type-correct, shardable, no device allocation.
+
+``cell_inputs(arch, shape)`` returns everything ``dryrun`` needs to
+lower the right step function for that cell:
+
+  train cells   -> (abstract TrainState, abstract batch)
+  prefill cells -> (abstract params, abstract batch)
+  decode cells  -> (abstract params, abstract caches, tokens, index)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell, get_config
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.models.common import abstract_params
+from repro.train.train_step import abstract_train_state
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class CellSpec(NamedTuple):
+    kind: str                 # "train" | "prefill" | "decode"
+    cfg: ModelConfig
+    args: tuple               # abstract positional args for the step fn
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {
+        "tokens": sds((batch, seq), jnp.int32),
+        "labels": sds((batch, seq), jnp.int32),
+        "mask": sds((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        out["patches"] = sds((batch, cfg.n_patches, cfg.d_model),
+                             jnp.bfloat16)
+    if cfg.family == "encdec":
+        s_enc = max(int(seq * cfg.encoder_seq_ratio), 1)
+        out["frames"] = sds((batch, s_enc, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, batch: int, seq: int
+                        ) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {"tokens": sds((batch, seq), jnp.int32)}
+    if cfg.family == "vlm":
+        out["patches"] = sds((batch, cfg.n_patches, cfg.d_model),
+                             jnp.bfloat16)
+    if cfg.family == "encdec":
+        s_enc = max(int(seq * cfg.encoder_seq_ratio), 1)
+        out["frames"] = sds((batch, s_enc, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, seq: int) -> Any:
+    """ShapeDtypeStruct cache tree (eval_shape — no allocation)."""
+    return jax.eval_shape(lambda: api.init_caches(cfg, batch, seq))
+
+
+def cell_inputs(arch: str, cell: ShapeCell,
+                cfg: Optional[ModelConfig] = None) -> CellSpec:
+    cfg = cfg or get_config(arch)
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        state = abstract_train_state(cfg)
+        batch = train_batch_specs(cfg, b, s)
+        return CellSpec("train", cfg, (state, batch))
+    if cell.kind == "prefill":
+        params = abstract_params(api.param_table(cfg))
+        batch = prefill_batch_specs(cfg, b, s)
+        return CellSpec("prefill", cfg, (params, batch))
+    if cell.kind == "decode":
+        params = abstract_params(api.param_table(cfg))
+        caches = abstract_caches(cfg, b, s)
+        tokens = sds((b, 1), jnp.int32)
+        index = sds((), jnp.int32)
+        return CellSpec("decode", cfg, (params, caches, tokens, index))
+    raise ValueError(cell.kind)
+
+
+def input_specs(arch: str, shape_name: str = "train_4k") -> Dict[str, Any]:
+    """Flat convenience view (README snippets / quick inspection)."""
+    from repro.configs import SHAPES
+    spec = cell_inputs(arch, SHAPES[shape_name])
+    if spec.kind == "train":
+        return {"state": spec.args[0], "batch": spec.args[1]}
+    if spec.kind == "prefill":
+        return {"params": spec.args[0], "batch": spec.args[1]}
+    return {"params": spec.args[0], "caches": spec.args[1],
+            "tokens": spec.args[2], "index": spec.args[3]}

@@ -1,0 +1,67 @@
+"""The paper's loop as a CLI: twin + PBS-emulator co-simulation.
+
+    python -m repro.launch.twin_loop                  # paper §4.1 setup
+    python -m repro.launch.twin_loop --pool extended --ensemble 8
+    python -m repro.launch.twin_loop --failures 2     # fault injection
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.cluster.emulator import ClusterEmulator, FailureSpec
+from repro.cluster.workload import paper_synthetic_trace, poisson_trace
+from repro.core.events import EventBus
+from repro.core.policies import EXTENDED_POOL, PAPER_POOL
+from repro.core.twin import SchedTwin
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", choices=("paper", "poisson"), default="paper")
+    ap.add_argument("--jobs", type=int, default=150)
+    ap.add_argument("--nodes", type=int, default=32)
+    ap.add_argument("--pool", choices=("paper", "extended"), default="paper")
+    ap.add_argument("--ensemble", type=int, default=1)
+    ap.add_argument("--failures", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.trace == "paper":
+        trace = paper_synthetic_trace(seed=args.seed)
+    else:
+        trace = poisson_trace(args.jobs, args.nodes, 8.0, (1, args.nodes),
+                              (30.0, 900.0), seed=args.seed)
+
+    rng = np.random.default_rng(args.seed)
+    makespan_guess = len(trace) * 8.0
+    failures = [FailureSpec(time=float(rng.uniform(0.2, 0.8) * makespan_guess),
+                            nodes=max(1, args.nodes // 8),
+                            duration=300.0)
+                for _ in range(args.failures)]
+
+    bus = EventBus()
+    em = ClusterEmulator(trace, args.nodes, bus=bus, failures=failures,
+                         check_invariants=True)
+    twin = SchedTwin(
+        bus=bus, qrun=em.qrun, total_nodes=args.nodes,
+        max_jobs=em.max_jobs,
+        pool=PAPER_POOL if args.pool == "paper" else EXTENDED_POOL,
+        free_nodes_probe=lambda: em.free_nodes,
+        ensemble=args.ensemble)
+    report = em.run(on_event=twin.pump)
+
+    print(f"jobs={report.n_jobs} events={report.n_events} "
+          f"restarts={report.n_restarts}")
+    for k, v in report.metric_dict().items():
+        print(f"  {k:14s} {v:10.2f}")
+    print("policy mix:", {k: f"{v:.1f}%" for k, v in
+                          twin.telemetry.policy_start_distribution().items()})
+    lat = twin.telemetry.cycle_latency_stats()
+    print(f"cycle latency: mean {lat['mean_s'] * 1e3:.1f} ms, "
+          f"p50 {lat['p50_s'] * 1e3:.1f} ms over {lat['n']} cycles")
+
+
+if __name__ == "__main__":
+    main()

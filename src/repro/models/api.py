@@ -1,0 +1,48 @@
+"""Model facade: family-dispatched entry points with one signature.
+
+Everything downstream (train step, serving engine, dry-run lowering)
+talks to models through these five functions; ``encdec`` (Whisper) is
+the only family with its own implementations, the rest share ``lm``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+from repro.models.common import ParamTable
+
+
+def param_table(cfg: ModelConfig) -> ParamTable:
+    if cfg.family == "encdec":
+        return encdec.encdec_table(cfg)
+    return lm.lm_table(cfg)
+
+
+def train_loss(cfg: ModelConfig, rules, params, batch
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    if cfg.family == "encdec":
+        return encdec.train_loss(cfg, rules, params, batch)
+    return lm.train_loss(cfg, rules, params, batch)
+
+
+def prefill(cfg: ModelConfig, rules, params, batch):
+    if cfg.family == "encdec":
+        return encdec.prefill(cfg, rules, params, batch)
+    return lm.prefill(cfg, rules, params, batch)
+
+
+def decode_step(cfg: ModelConfig, rules, params, caches, batch):
+    if cfg.family == "encdec":
+        return encdec.decode_step(cfg, rules, params, caches, batch)
+    return lm.decode_step(cfg, rules, params, caches, batch)
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq: int, dtype=None) -> Any:
+    import jax.numpy as jnp
+    dtype = dtype or jnp.bfloat16
+    if cfg.family == "encdec":
+        return encdec.init_caches(cfg, batch, seq, dtype)
+    return lm.init_caches(cfg, batch, seq, dtype)

@@ -1,0 +1,151 @@
+"""Attention in pure JAX — differentiable, XLA/SPMD-friendly.
+
+``full_attention`` is *triangle-blocked*: the query axis is split into
+static blocks (Python-unrolled), and each block attends only to its key
+prefix (causal), a sliding window (local), or the full sequence
+(bidirectional).  Static slicing keeps causal FLOPs at ~S^2/2 (the
+useful count — important for the MODEL_FLOPS/HLO_FLOPs roofline ratio),
+bounds peak score memory to (B, H, q_block, ctx), needs no custom VJP,
+and lets XLA SPMD shard heads/sequence freely.
+
+GQA/MQA never materializes repeated KV heads: queries are reshaped to
+(B, kv_heads, group, S, D) and contracted against the raw KV.
+
+The Pallas TPU kernel (`repro/kernels/flash_attention.py`) implements
+the same online-softmax computation with explicit VMEM tiling; this
+module is its oracle (see tests/test_kernels_flash.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _group_heads(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, Hq, S, D) -> (B, Hkv, G, S, D)."""
+    b, hq, s, d = q.shape
+    return q.reshape(b, n_kv, hq // n_kv, s, d)
+
+
+def _expand_kv(k: jax.Array, group: int) -> jax.Array:
+    """(B, Hkv, S, D) -> (B, Hkv*G, S, D) by broadcast.
+
+    Perf note (EXPERIMENTS.md §Perf H1): the grouped-query formulation
+    reshapes q to (B, Hkv, G, S, D), which splits the sharded head axis
+    into (Hkv, G); when Hkv doesn't divide the mesh's model axis the
+    SPMD partitioner falls back to *involuntary full rematerialization*
+    — a full replicate+repartition of activation-sized tensors in every
+    layer.  Broadcasting KV up to the query heads keeps one contiguous
+    head axis that stays sharded end-to-end; XLA fuses the broadcast
+    into the dot, so no repeated-KV tensor is materialized in HBM.
+    """
+    if group == 1:
+        return k
+    b, hkv, s, d = k.shape
+    k = jnp.broadcast_to(k[:, :, None], (b, hkv, group, s, d))
+    return k.reshape(b, hkv * group, s, d)
+
+
+def _attend_block(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: Optional[jax.Array], scale: float) -> jax.Array:
+    """q: (B, H, Bq, D); k/v: (B, H, Ctx, D) (KV pre-broadcast for GQA);
+    mask broadcastable to (B, H, Bq, Ctx).  Softmax in f32."""
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+    return out
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   *,
+                   causal: bool = True,
+                   local_window: int = 0,
+                   q_block: int = 512,
+                   q_offset: int = 0,
+                   scale: Optional[float] = None) -> jax.Array:
+    """Triangle-blocked multi-(grouped-)head attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D).  Returns (B, Hq, Sq, D).
+    ``q_offset``: global position of q[...,0,:] (cross-chunk prefill).
+    ``local_window`` > 0 limits attention to the last W positions
+    (RecurrentGemma local attention); implies causal.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    q_block = min(q_block, sq)
+    n_blocks = (sq + q_block - 1) // q_block
+    k = _expand_kv(k, hq // hkv)
+    v = _expand_kv(v, hq // hkv)
+
+    if not (causal or local_window):
+        # bidirectional: one shot per q block against full KV
+        outs = []
+        for i in range(n_blocks):
+            lo = i * q_block
+            hi = min(lo + q_block, sq)
+            outs.append(_attend_block(q[:, :, lo:hi], k, v, None, scale))
+        return jnp.concatenate(outs, axis=2)
+
+    outs = []
+    for i in range(n_blocks):
+        lo = i * q_block
+        hi = min(lo + q_block, sq)
+        q_pos_hi = q_offset + hi  # exclusive global end of this block
+        if local_window > 0:
+            k_lo = max(0, q_pos_hi - local_window - (hi - lo))
+        else:
+            k_lo = 0
+        k_hi = min(q_pos_hi, sk)
+        kb = k[:, :, k_lo:k_hi]
+        vb = v[:, :, k_lo:k_hi]
+        q_pos = (q_offset + jnp.arange(lo, hi))[:, None]        # (Bq, 1)
+        k_pos = jnp.arange(k_lo, k_hi)[None, :]                 # (1, Ctx)
+        mask = k_pos <= q_pos
+        if local_window > 0:
+            mask &= k_pos > (q_pos - local_window)
+        outs.append(_attend_block(
+            q[:, :, lo:hi], kb, vb, mask[None, None], scale))
+    return jnp.concatenate(outs, axis=2)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     *,
+                     kv_valid: Optional[jax.Array] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-step decode: q (B, Hq, 1, D) vs cache (B, Hkv, S, D).
+
+    ``kv_valid`` (B, S) masks unwritten/ring-buffer slots.  The score
+    row is tiny (S per head), so no blocking; with the cache sequence
+    axis sharded over the mesh `model` axis, XLA SPMD inserts the
+    distributed max/sum reductions (flash-decode equivalent).
+    """
+    b, hq, _, d = q.shape
+    _, hkv, s, _ = k_cache.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = _group_heads(q, hkv)  # (B, Hkv, G, 1, D)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if kv_valid is not None:
+        scores = jnp.where(kv_valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, hq, 1, v_cache.shape[-1])
+
+
+def update_cache(k_cache: jax.Array, v_cache: jax.Array,
+                 k_new: jax.Array, v_new: jax.Array,
+                 index: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Write one decode step into the cache at ``index`` (ring semantics
+    when index is taken modulo the cache length by the caller)."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), index, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), index, axis=2)
+    return k_cache, v_cache

@@ -1,0 +1,222 @@
+"""Dense attention + MLP blocks (llama-family, local-attention hybrid).
+
+Block contract (shared by all block modules):
+
+  table(cfg) -> ParamTable                       # declarative params
+  apply(cfg, rules, params, x, *, mode, cache, positions)
+      -> (y, new_cache, aux)
+
+``mode`` is one of "train" | "prefill" | "decode".  ``positions`` is
+(B, S) global token positions (decode: S=1, the write index).  Caches
+are dicts of arrays; ``init_cache`` builds them (the sequence axis is
+sharded per the active rules, e.g. over `model` for flash-decode).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import megatron_sp
+from repro.models import attention
+from repro.models.common import ParamTable, rms_norm, swiglu
+
+Aux = Dict[str, jax.Array]
+Cache = Optional[Dict[str, jax.Array]]
+
+
+# ----------------------------------------------------------------------
+# GQA/MQA attention sub-layer
+# ----------------------------------------------------------------------
+
+def attn_table(cfg: ModelConfig) -> ParamTable:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    t: ParamTable = {
+        "attn.wq": ((d, cfg.n_heads, hd), ("d_model", "heads", "head_dim")),
+        "attn.wk": ((d, cfg.n_kv_heads, hd),
+                    ("d_model", "kv_heads", "head_dim")),
+        "attn.wv": ((d, cfg.n_kv_heads, hd),
+                    ("d_model", "kv_heads", "head_dim")),
+        "attn.wo": ((cfg.n_heads, hd, d), ("heads", "head_dim", "d_model")),
+        "attn_norm.scale": ((d,), (None,)),
+    }
+    if cfg.qkv_bias:
+        t["attn.bq"] = ((cfg.n_heads, hd), ("heads", "head_dim"))
+        t["attn.bk"] = ((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"))
+        t["attn.bv"] = ((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"))
+    return t
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, seq: int,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    hd = cfg.resolved_head_dim
+    kv = max(cfg.n_kv_heads, 1)
+    window = cfg.local_window or seq
+    s = min(seq, window) if cfg.local_window else seq
+    return {
+        "k": jnp.zeros((batch, kv, s, hd), dtype=dtype),
+        "v": jnp.zeros((batch, kv, s, hd), dtype=dtype),
+    }
+
+
+def attn_apply(cfg: ModelConfig, rules, params, x: jax.Array, *,
+               mode: str, cache: Cache, positions: jax.Array,
+               local_window: int = 0,
+               prefix: str = "attn") -> Tuple[jax.Array, Cache]:
+    """x: (B, S, d) -> (B, S, d).  RoPE + GQA + causal (or local)."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+
+    heads_shard = rules.spec_for(
+        ("d_model", "heads", "head_dim"),
+        params[f"{prefix}.wq"].shape)[1] is not None
+    if (mode != "decode" and heads_shard
+            and megatron_sp.sp_enabled(rules, s, b)):
+        # fused SP->TP: one seq all-gather + QKV projections in one
+        # shard_map so backward is a single reduce-scatter (§Perf).
+        # Archs whose heads don't divide TP (recurrentgemma: 10 on 16)
+        # keep token-parallel projections — gathering the sequence for
+        # replicated heads would 16x-duplicate the QKV compute.
+        q, k, v = megatron_sp.in_project_ag(
+            x, [params[f"{prefix}.wq"], params[f"{prefix}.wk"],
+                params[f"{prefix}.wv"]],
+            rules=rules, kinds=("dhk", "dhk", "dhk"))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params[f"{prefix}.wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, params[f"{prefix}.wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params[f"{prefix}.wv"])
+    if cfg.qkv_bias:
+        q = q + params[f"{prefix}.bq"]
+        k = k + params[f"{prefix}.bk"]
+        v = v + params[f"{prefix}.bv"]
+
+    q = attention_rope(q, positions, cfg.rope_theta)
+    k = attention_rope(k, positions, cfg.rope_theta)
+
+    # (B, S, H, D) -> (B, H, S, D); shard attention compute by heads
+    q = rules.constraint(q.transpose(0, 2, 1, 3),
+                         "batch", "act_heads", None, None)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    if mode == "decode":
+        assert cache is not None
+        idx = positions[0, 0]  # uniform decode step across the batch
+        if local_window:
+            w = cache["k"].shape[2]
+            widx = jnp.mod(idx, w)
+            kc, vc = attention.update_cache(cache["k"], cache["v"], k, v,
+                                            widx)
+            # until the ring fills, only slots <= idx have been written
+            valid = (jnp.arange(w)[None, :] <= idx) | (idx + 1 >= w)
+            valid = jnp.broadcast_to(valid, (b, w))
+        else:
+            kc, vc = attention.update_cache(cache["k"], cache["v"], k, v,
+                                            idx)
+            kv_pos = jnp.arange(kc.shape[2])[None, :]
+            valid = kv_pos <= idx
+        kc = rules.constraint(kc, "batch", "act_kv_heads", "kv_seq", None)
+        vc = rules.constraint(vc, "batch", "act_kv_heads", "kv_seq", None)
+        out = attention.decode_attention(q, kc, vc, kv_valid=valid)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        out = attention.full_attention(
+            q, k, v, causal=True, local_window=local_window,
+            q_block=cfg.q_block)
+        new_cache = None
+        if mode == "prefill":
+            if local_window:
+                w = local_window
+                kc = k[:, :, -w:]
+                vc = v[:, :, -w:]
+                # ring layout: slot = pos % window
+                roll = jnp.mod(s, w)
+                kc = jnp.roll(kc, roll, axis=2)
+                vc = jnp.roll(vc, roll, axis=2)
+            else:
+                kc, vc = k, v
+            kc = rules.constraint(kc, "batch", "act_kv_heads", "kv_seq", None)
+            vc = rules.constraint(vc, "batch", "act_kv_heads", "kv_seq", None)
+            new_cache = {"k": kc, "v": vc}
+
+    out = out.transpose(0, 2, 1, 3)  # (B, S, H, D)
+    wo = params[f"{prefix}.wo"]
+    if (mode != "decode" and heads_shard
+            and megatron_sp.sp_enabled(rules, s, b)):
+        # explicit TP->SP transition: partial sums reduce-scatter onto
+        # the sequence axis in bf16 (see distributed/megatron_sp.py)
+        y = megatron_sp.out_project_rs(out, wo, rules=rules,
+                                       contract="hkd")
+    else:
+        y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, new_cache
+
+
+def attention_rope(x: jax.Array, positions: jax.Array,
+                   theta: float) -> jax.Array:
+    """RoPE on (B, S, H, D) with (B, S) positions."""
+    from repro.models.common import rope
+    return rope(x, positions, theta)
+
+
+# ----------------------------------------------------------------------
+# SwiGLU MLP sub-layer
+# ----------------------------------------------------------------------
+
+def mlp_table(cfg: ModelConfig, d_ff: Optional[int] = None) -> ParamTable:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "mlp.w_gate": ((d, f), ("d_model", "d_ff")),
+        "mlp.w_up": ((d, f), ("d_model", "d_ff")),
+        "mlp.w_down": ((f, d), ("d_ff", "d_model")),
+        "mlp_norm.scale": ((d,), (None,)),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, rules, params, x: jax.Array,
+              prefix: str = "mlp", mode: str = "train") -> jax.Array:
+    sp = mode != "decode" and megatron_sp.sp_enabled(rules, x.shape[1], x.shape[0])
+    if sp:
+        g, u = megatron_sp.in_project_ag(
+            x, [params[f"{prefix}.w_gate"], params[f"{prefix}.w_up"]],
+            rules=rules, kinds=("df", "df"))
+    else:
+        g = jnp.einsum("bsd,df->bsf", x, params[f"{prefix}.w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, params[f"{prefix}.w_up"])
+    h = rules.constraint(jax.nn.silu(g) * u, "batch", None, "act_d_ff")
+    w_down = params[f"{prefix}.w_down"]
+    if sp:
+        return megatron_sp.out_project_rs(h, w_down, rules=rules,
+                                          contract="fd")
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+# ----------------------------------------------------------------------
+# Full dense decoder block (pre-norm residual)
+# ----------------------------------------------------------------------
+
+def table(cfg: ModelConfig) -> ParamTable:
+    return {**attn_table(cfg), **mlp_table(cfg)}
+
+
+def apply(cfg: ModelConfig, rules, params, x: jax.Array, *,
+          mode: str, cache: Cache, positions: jax.Array,
+          local_window: int = 0) -> Tuple[jax.Array, Cache, Aux]:
+    h = rms_norm(x, params["attn_norm.scale"], cfg.norm_eps)
+    a, new_cache = attn_apply(cfg, rules, params, h, mode=mode, cache=cache,
+                              positions=positions,
+                              local_window=local_window)
+    x = x + a
+    x = rules.constraint(x, "batch", "seq", None)
+    h = rms_norm(x, params["mlp_norm.scale"], cfg.norm_eps)
+    x = x + mlp_apply(cfg, rules, params, h, mode=mode)
+    x = rules.constraint(x, "batch", "seq", None)
+    return x, new_cache, {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return init_attn_cache(cfg, batch, seq, dtype)

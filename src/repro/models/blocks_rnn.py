@@ -1,0 +1,458 @@
+"""Recurrent blocks: RWKV6 "Finch" time/channel mix and RG-LRU (Griffin /
+RecurrentGemma).
+
+Both carry O(1)-per-stream state (no KV cache growth), which is why
+these architectures run the ``long_500k`` cell.  Training uses a
+*chunked* scan — an outer ``lax.scan`` over time chunks whose inner
+step is ``jax.checkpoint``-ed — so backward memory is O(S/chunk)
+boundary states instead of O(S) step intermediates.
+
+The WKV6 recurrence has a Pallas TPU kernel
+(`repro/kernels/wkv6.py`, state resident in VMEM, grid over B*H);
+``wkv_scan`` here is its oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamTable, layer_norm, rms_norm
+
+Aux = Dict[str, jax.Array]
+Cache = Optional[Dict[str, jax.Array]]
+
+TIME_CHUNK = 128     # scan chunk length (remat boundary)
+LORA_MIX = 32        # token-shift ddlerp LoRA rank
+LORA_DECAY = 64      # data-dependent decay LoRA rank
+
+
+# ======================================================================
+# RWKV6
+# ======================================================================
+
+def rwkv_table(cfg: ModelConfig) -> ParamTable:
+    d, f = cfg.d_model, cfg.d_ff
+    n = cfg.rwkv_head_size
+    h = d // n
+    return {
+        "ln1.scale": ((d,), (None,)), "ln1.bias": ((d,), (None,)),
+        "ln2.scale": ((d,), (None,)), "ln2.bias": ((d,), (None,)),
+        # time-mix: data-dependent token-shift interpolation (ddlerp)
+        "tm.mu_x": ((d,), (None,)),
+        "tm.mu": ((5, d), (None, None)),
+        "tm.w1": ((d, 5 * LORA_MIX), ("d_model", None)),
+        "tm.w2": ((5, LORA_MIX, d), (None, None, "d_model")),
+        # data-dependent decay
+        "tm.decay_base": ((d,), (None,)),
+        "tm.dw1": ((d, LORA_DECAY), ("d_model", None)),
+        "tm.dw2": ((LORA_DECAY, d), (None, "d_model")),
+        "tm.bonus": ((h, n), ("heads", None)),
+        "tm.wr": ((d, d), ("d_model", "heads_x")),
+        "tm.wk": ((d, d), ("d_model", "heads_x")),
+        "tm.wv": ((d, d), ("d_model", "heads_x")),
+        "tm.wg": ((d, d), ("d_model", "heads_x")),
+        "tm.wo": ((d, d), ("heads_x", "d_model")),
+        "tm.ln_x.scale": ((d,), (None,)), "tm.ln_x.bias": ((d,), (None,)),
+        # channel-mix
+        "cm.mu_k": ((d,), (None,)), "cm.mu_r": ((d,), (None,)),
+        "cm.wk": ((d, f), ("d_model", "d_ff")),
+        "cm.wv": ((f, d), ("d_ff", "d_model")),
+        "cm.wr": ((d, d), ("d_model", None)),
+    }
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, seq: int,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    n = cfg.rwkv_head_size
+    h = d // n
+    return {
+        "tm_x": jnp.zeros((batch, d), dtype=dtype),
+        "cm_x": jnp.zeros((batch, d), dtype=dtype),
+        # wkv state is f32: it integrates over the whole context
+        "wkv": jnp.zeros((batch, h, n, n), dtype=jnp.float32),
+    }
+
+
+def wkv_step(state: jax.Array, r, k, v, w, u) -> Tuple[jax.Array, jax.Array]:
+    """One WKV6 step.  state: (B,H,N,N) [key x value]; r/k/v/w: (B,H,N);
+    u: (H,N).  Returns (new_state, y (B,H,N))."""
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)              # outer product
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    new_state = w[..., None] * state + kv
+    return new_state, y
+
+
+def wkv_scan(state: jax.Array, r, k, v, w, u,
+             chunk: int = TIME_CHUNK) -> Tuple[jax.Array, jax.Array]:
+    """Sequence WKV6.  r/k/v/w: (B,S,H,N) f32; u: (H,N).
+    Returns (final_state, y (B,S,H,N)).  Chunked + rematerialized."""
+    b, s, h, n = r.shape
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp
+        st, y = wkv_step(st, rt, kt, vt, wt, u)
+        return st, y
+
+    def chunk_body(st, inp):
+        return jax.lax.scan(step, st, inp)
+
+    chunk = min(chunk, s)
+    if s % chunk == 0 and s > chunk:
+        nc = s // chunk
+        # (B,S,H,N) -> (nc, chunk, B,H,N)
+        def to_chunks(x):
+            return (x.transpose(1, 0, 2, 3)
+                    .reshape(nc, chunk, b, h, n))
+        inp = tuple(to_chunks(x) for x in (r, k, v, w))
+
+        def outer(st, ci):
+            return jax.checkpoint(chunk_body)(st, ci)
+
+        state, ys = jax.lax.scan(outer, state, inp)
+        y = ys.reshape(s, b, h, n).transpose(1, 0, 2, 3)
+    else:
+        inp = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, w))
+        state, ys = jax.lax.scan(step, state, inp)
+        y = ys.transpose(1, 0, 2, 3)
+    return state, y
+
+
+WKV_CHUNK = 32   # chunked-formulation block length (§Perf H4)
+
+
+def wkv_chunked(state: jax.Array, r, k, v, w, u,
+                chunk: int = WKV_CHUNK) -> Tuple[jax.Array, jax.Array]:
+    """Chunked-parallel WKV6 — same recurrence as ``wkv_scan`` but
+    processed ``chunk`` steps at a time with matmuls (§Perf H4).
+
+    The per-step scan writes the (B, H, N, N) f32 state to HBM every
+    token (XLA cannot keep a 4 MB carry in registers), which makes the
+    RWKV train cells memory-bound by an order of magnitude.  Within a
+    chunk, using inclusive decay products P_t = prod_{tau<=t} w_tau:
+
+      y_t  = (r_t . P_{t-1}) @ S_0                     (inter-chunk)
+           + sum_{s<t} [r_t k_s exp(L_{t-1}-L_s)] v_s  (intra-chunk)
+           + (r_t . u . k_t) v_t                       (bonus diag)
+      S'   = P_C . S_0 + (k . P_C/P_tau)^T @ V         (state update)
+
+    All exponentials are of NON-POSITIVE quantities (log-decays), so
+    every factor lives in [0, 1]: unconditionally stable, unlike the
+    separated r*P / k/P factorization which overflows for long chunks.
+    The (C, C, N) decay tensor is the price — C=32 keeps it at 256 KB
+    per (b, h), ~8x less HBM traffic than the per-step carry, and the
+    state now round-trips HBM once per chunk instead of once per step.
+
+    r/k/v/w: (B, S, H, N) f32; u: (H, N); state: (B, H, N, N).
+    Returns (final_state, y (B, S, H, N)) — same contract as wkv_scan.
+    """
+    b, s, h, n = r.shape
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        return wkv_scan(state, r, k, v, w, u)
+    nc = s // chunk
+
+    def to_chunks(x):
+        return (x.reshape(b, nc, chunk, h, n)
+                .transpose(1, 0, 3, 2, 4))        # (nc, B, H, C, N)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    log_w = jnp.log(jnp.maximum(wc, 1e-30))       # (nc, B, H, C, N) <= 0
+
+    def chunk_body(S0, inp):
+        rt, kt, vt, lw = inp
+        L = jnp.cumsum(lw, axis=2)
+        P_prev = jnp.exp(L - lw)
+        P_end = jnp.exp(L[:, :, -1:, :])
+
+        y_inter = jnp.einsum("bhtn,bhnm->bhtm", rt * P_prev, S0)
+
+        diff = (L - lw)[:, :, :, None, :] - L[:, :, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool), -1)
+        D = jnp.where(tri[None, None, :, :, None],
+                      jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        A = jnp.einsum("bhtn,bhsn,bhtsn->bhts", rt, kt, D)
+        bonus = jnp.sum(rt * u[None, :, None, :] * kt, axis=-1)  # (B,H,C)
+        y_intra = jnp.einsum("bhts,bhsm->bhtm", A, vt) \
+            + bonus[..., None] * vt
+
+        decay_to_end = jnp.exp(L[:, :, -1:, :] - L)   # (B,H,C,N) in [0,1]
+        S_new = P_end.transpose(0, 1, 3, 2) * S0 + jnp.einsum(
+            "bhsn,bhsm->bhnm", kt * decay_to_end, vt)
+        return S_new, y_inter + y_intra
+
+    state, ys = jax.lax.scan(chunk_body, state, (rc, kc, vc, log_w))
+    # ys: (nc, B, H, C, N) -> (B, S, H, N)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, n)
+    return state, y
+
+
+def _ddlerp(params, x: jax.Array, dx: jax.Array) -> Tuple[jax.Array, ...]:
+    """Data-dependent token-shift mixing -> (xw, xk, xv, xr, xg)."""
+    mix_in = x + dx * params["tm.mu_x"]
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", mix_in, params["tm.w1"]))
+    b, s, _ = lora.shape
+    lora = lora.reshape(b, s, 5, LORA_MIX)
+    delta = jnp.einsum("bsir,ird->bsid", lora, params["tm.w2"])
+    mixes = params["tm.mu"][None, None] + delta          # (B,S,5,d)
+    return tuple(x + dx * mixes[:, :, i] for i in range(5))
+
+
+def rwkv_time_mix(cfg: ModelConfig, rules, params, x: jax.Array, *,
+                  mode: str, cache: Cache) -> Tuple[jax.Array, Cache]:
+    b, s, d = x.shape
+    n = cfg.rwkv_head_size
+    h = d // n
+
+    if mode == "decode":
+        x_prev = cache["tm_x"][:, None, :].astype(x.dtype)
+    else:
+        x_prev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    dx = x_prev - x
+
+    xw, xk, xv, xr, xg = _ddlerp(params, x, dx)
+    r = jnp.einsum("bsd,de->bse", xr, params["tm.wr"])
+    k = jnp.einsum("bsd,de->bse", xk, params["tm.wk"])
+    v = jnp.einsum("bsd,de->bse", xv, params["tm.wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, params["tm.wg"]))
+    decay_in = (params["tm.decay_base"]
+                + jnp.einsum("bsd,dr->bsr",
+                             jnp.tanh(jnp.einsum("bsd,dr->bsr", xw,
+                                                 params["tm.dw1"])),
+                             params["tm.dw2"]))
+    w = jnp.exp(-jnp.exp(decay_in.astype(jnp.float32)))   # (0,1) decay
+
+    def heads(t):
+        return t.reshape(b, s, h, n).astype(jnp.float32)
+
+    r_, k_, v_, w_ = heads(r), heads(k), heads(v), heads(w)
+    u = params["tm.bonus"].astype(jnp.float32)
+
+    state0 = (cache["wkv"] if mode == "decode"
+              else jnp.zeros((b, h, n, n), dtype=jnp.float32))
+    if mode == "decode":
+        state, y = wkv_step(state0, r_[:, 0], k_[:, 0], v_[:, 0], w_[:, 0], u)
+        y = y[:, None]                                   # (B,1,H,N)
+    else:
+        # On TPU the hot path is the Pallas wkv6 kernel (state resident
+        # in VMEM — repro/kernels/wkv6.py).  The pure-XLA fallback is
+        # the chunk-rematerialized scan; the chunked-matmul variant
+        # (wkv_chunked) LOST to it under XLA:CPU lowering because the
+        # (C, C, N) decay tensor never fuses — measured + recorded in
+        # EXPERIMENTS.md §Perf H4 (refuted hypothesis).
+        state, y = wkv_scan(state0, r_, k_, v_, w_, u)
+
+    y = y.reshape(b, s, d)
+    # per-head group norm
+    yh = y.reshape(b, s, h, n)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(b, s, d).astype(x.dtype)
+    y = y * params["tm.ln_x.scale"] + params["tm.ln_x.bias"]
+    y = jnp.einsum("bse,ed->bsd", y * g, params["tm.wo"])
+
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"tm_x": x[:, -1].astype(jnp.bfloat16), "wkv": state}
+    return y, new_cache
+
+
+def rwkv_channel_mix(cfg: ModelConfig, params, x: jax.Array, *,
+                     mode: str, cache: Cache) -> Tuple[jax.Array, Cache]:
+    if mode == "decode":
+        x_prev = cache["cm_x"][:, None, :].astype(x.dtype)
+    else:
+        x_prev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    dx = x_prev - x
+    xk = x + dx * params["cm.mu_k"]
+    xr = x + dx * params["cm.mu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk,
+                                          params["cm.wk"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, params["cm.wv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, params["cm.wr"])) * kv
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"cm_x": x[:, -1].astype(jnp.bfloat16)}
+    return out, new_cache
+
+
+def table(cfg: ModelConfig) -> ParamTable:
+    return rwkv_table(cfg)
+
+
+def apply(cfg: ModelConfig, rules, params, x: jax.Array, *,
+          mode: str, cache: Cache, positions: jax.Array
+          ) -> Tuple[jax.Array, Cache, Aux]:
+    h = layer_norm(x, params["ln1.scale"], params["ln1.bias"], cfg.norm_eps)
+    a, c_tm = rwkv_time_mix(cfg, rules, params, h, mode=mode, cache=cache)
+    x = x + a
+    x = rules.constraint(x, "batch", "seq", None)
+    h = layer_norm(x, params["ln2.scale"], params["ln2.bias"], cfg.norm_eps)
+    m, c_cm = rwkv_channel_mix(cfg, params, h, mode=mode, cache=cache)
+    x = x + m
+    x = rules.constraint(x, "batch", "seq", None)
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {**(c_tm or {}), **(c_cm or {})}
+    return x, new_cache, {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return init_rwkv_cache(cfg, batch, seq, dtype)
+
+
+# ======================================================================
+# RG-LRU (RecurrentGemma / Griffin)
+# ======================================================================
+
+_RGLRU_C = 8.0
+
+
+def rglru_table(cfg: ModelConfig) -> ParamTable:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    cw = cfg.conv_width
+    return {
+        "norm.scale": ((d,), (None,)),
+        "rg.w_branch": ((d, w), ("d_model", "rnn")),
+        "rg.w_in": ((d, w), ("d_model", "rnn")),
+        "rg.conv_w": ((cw, w), (None, "rnn")),
+        "rg.conv_b": ((w,), ("rnn",)),
+        "rg.w_rgate": ((w, w), ("rnn", None)),
+        "rg.w_igate": ((w, w), ("rnn", None)),
+        "rg.rgate_bias": ((w,), ("rnn",)),
+        "rg.igate_bias": ((w,), ("rnn",)),
+        "rg.lambda": ((w,), ("rnn",)),
+        "rg.w_out": ((w, d), ("rnn", "d_model")),
+        # GeGLU MLP
+        "mlp.w_gate": ((d, cfg.d_ff), ("d_model", "d_ff")),
+        "mlp.w_up": ((d, cfg.d_ff), ("d_model", "d_ff")),
+        "mlp.w_down": ((cfg.d_ff, d), ("d_ff", "d_model")),
+        "mlp_norm.scale": ((d,), (None,)),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, seq: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype=dtype),
+        "h": jnp.zeros((batch, w), dtype=jnp.float32),
+    }
+
+
+def _causal_conv(params, x: jax.Array, state: Optional[jax.Array],
+                 mode: str) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv, width cw.  x: (B, S, W)."""
+    cw = params["rg.conv_w"].shape[0]
+    if mode == "decode":
+        hist = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B,cw,W)
+        y = jnp.einsum("bkw,kw->bw", hist, params["rg.conv_w"])
+        y = (y + params["rg.conv_b"])[:, None]
+        return y, hist[:, 1:]
+    pads = [jnp.pad(x[:, :x.shape[1] - i], ((0, 0), (i, 0), (0, 0)))
+            for i in range(cw)]
+    y = sum(pads[cw - 1 - k] * params["rg.conv_w"][k] for k in range(cw))
+    y = y + params["rg.conv_b"]
+    new_state = x[:, -(cw - 1):] if mode == "prefill" else None
+    return y, new_state
+
+
+def rglru_scan(a: jax.Array, gx: jax.Array, h0: jax.Array,
+               chunk: int = TIME_CHUNK) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + gx_t.  a/gx: (B,S,W) f32. Returns (hT, h)."""
+    b, s, w = a.shape
+
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    def chunk_body(h, inp):
+        return jax.lax.scan(step, h, inp)
+
+    chunk = min(chunk, s)
+    if s % chunk == 0 and s > chunk:
+        nc = s // chunk
+        a_c = a.transpose(1, 0, 2).reshape(nc, chunk, b, w)
+        g_c = gx.transpose(1, 0, 2).reshape(nc, chunk, b, w)
+
+        def outer(h, ci):
+            return jax.checkpoint(chunk_body)(h, ci)
+
+        hT, hs = jax.lax.scan(outer, h0, (a_c, g_c))
+        h = hs.reshape(s, b, w).transpose(1, 0, 2)
+    else:
+        hT, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                         gx.transpose(1, 0, 2)))
+        h = hs.transpose(1, 0, 2)
+    return hT, h
+
+
+def rglru_apply(cfg: ModelConfig, rules, params, x: jax.Array, *,
+                mode: str, cache: Cache) -> Tuple[jax.Array, Cache]:
+    """The Griffin recurrent block: GeLU branch ⊙ RG-LRU branch."""
+    branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x,
+                                    params["rg.w_branch"]))
+    u = jnp.einsum("bsd,dw->bsw", x, params["rg.w_in"])
+    u = rules.constraint(u, "batch", None, "rnn")
+    u, conv_state = _causal_conv(
+        params, u, cache.get("conv") if cache else None, mode)
+
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, params["rg.w_rgate"])
+        + params["rg.rgate_bias"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", u, params["rg.w_igate"])
+        + params["rg.igate_bias"]).astype(jnp.float32)
+    log_a = -_RGLRU_C * jax.nn.softplus(
+        params["rg.lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * u.astype(jnp.float32)
+
+    h0 = (cache["h"] if (cache is not None and mode == "decode")
+          else jnp.zeros(a.shape[::2], dtype=jnp.float32))
+    if mode == "decode":
+        hT = a[:, 0] * h0 + gated[:, 0]
+        h = hT[:, None]
+    else:
+        hT, h = rglru_scan(a, gated, h0)
+
+    y = (branch * h.astype(branch.dtype))
+    y = jnp.einsum("bsw,wd->bsd", y, params["rg.w_out"])
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"conv": conv_state, "h": hT}
+    return y, new_cache
+
+
+def geglu_mlp(params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, params["mlp.w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params["mlp.w_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u,
+                      params["mlp.w_down"])
+
+
+def rglru_block_apply(cfg: ModelConfig, rules, params, x: jax.Array, *,
+                      mode: str, cache: Cache, positions: jax.Array
+                      ) -> Tuple[jax.Array, Cache, Aux]:
+    h = rms_norm(x, params["norm.scale"], cfg.norm_eps)
+    a, new_cache = rglru_apply(cfg, rules, params, h, mode=mode, cache=cache)
+    x = x + a
+    x = rules.constraint(x, "batch", "seq", None)
+    h = rms_norm(x, params["mlp_norm.scale"], cfg.norm_eps)
+    x = x + geglu_mlp(params, h)
+    x = rules.constraint(x, "batch", "seq", None)
+    return x, new_cache, {}
+
+
+def init_cache_rglru(cfg: ModelConfig, batch: int, seq: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return init_rglru_cache(cfg, batch, seq, dtype)

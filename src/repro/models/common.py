@@ -1,0 +1,185 @@
+"""Shared model building blocks + the parameter-table convention.
+
+Every architecture describes its parameters declaratively via a
+*param table*: ``name -> (shape, logical_axes)``.  From one table we
+derive (a) random initialization, (b) abstract ShapeDtypeStructs for
+the dry-run, and (c) PartitionSpecs through a logical->mesh axis rule
+set (``repro/distributed/sharding.py``).  Layer stacks add a leading
+``"layers"`` axis and are applied with ``lax.scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ParamTable = Dict[str, Tuple[Tuple[int, ...], Tuple[Optional[str], ...]]]
+Params = Dict[str, jax.Array]
+
+
+# ----------------------------------------------------------------------
+# Param-table helpers
+# ----------------------------------------------------------------------
+
+def stack_table(table: ParamTable, n_layers: int) -> ParamTable:
+    """Add a leading scanned-layers axis to every entry."""
+    return {k: ((n_layers,) + shape, ("layers",) + axes)
+            for k, (shape, axes) in table.items()}
+
+
+def prefix_table(prefix: str, table: ParamTable) -> ParamTable:
+    return {f"{prefix}.{k}": v for k, v in table.items()}
+
+
+def merge_tables(*tables: ParamTable) -> ParamTable:
+    out: ParamTable = {}
+    for t in tables:
+        dup = set(out) & set(t)
+        if dup:
+            raise ValueError(f"duplicate param names: {dup}")
+        out.update(t)
+    return out
+
+
+def init_params(key: jax.Array, table: ParamTable,
+                dtype=jnp.bfloat16, scale: float = 0.02) -> Params:
+    """Truncated-normal-ish init; norm gains/biases get ones/zeros."""
+    params: Params = {}
+    keys = jax.random.split(key, max(len(table), 1))
+    for (name, (shape, _)), k in zip(sorted(table.items()), keys):
+        if name.endswith(("norm.scale", "ln.scale")):
+            params[name] = jnp.ones(shape, dtype=dtype)
+        elif name.endswith((".bias", "norm.bias", ".decay_bias")):
+            params[name] = jnp.zeros(shape, dtype=dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = min(scale, 1.0 / math.sqrt(max(fan_in, 1)))
+            params[name] = (std * jax.random.normal(k, shape)).astype(dtype)
+    return params
+
+
+def abstract_params(table: ParamTable, dtype=jnp.bfloat16) -> Params:
+    """ShapeDtypeStruct pytree — dry-run stand-in (no allocation)."""
+    return {name: jax.ShapeDtypeStruct(shape, dtype)
+            for name, (shape, _) in table.items()}
+
+
+# ----------------------------------------------------------------------
+# Primitive layers (pure functions over the params dict)
+# ----------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale + bias
+
+
+def rope(x: jax.Array, positions: jax.Array,
+         theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding.  x: (..., S, H, D) or (..., S, D); positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == ang.ndim + 1:          # (..., S, H, D): broadcast over heads
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+             w_out: jax.Array, b_out: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in) + b_in)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+# ----------------------------------------------------------------------
+# Vocabulary / loss
+# ----------------------------------------------------------------------
+
+def embed(tokens: jax.Array, embedding: jax.Array) -> jax.Array:
+    return jnp.take(embedding, tokens, axis=0)
+
+
+def unembed(x: jax.Array, embedding: jax.Array) -> jax.Array:
+    """Logits via tied or untied unembedding: (..., d) @ (V, d)^T."""
+    return jnp.einsum("...d,vd->...v", x, embedding)
+
+
+def chunked_softmax_xent(x: jax.Array, labels: jax.Array,
+                         unembed_w: jax.Array, mask: jax.Array,
+                         chunk: int = 1024) -> jax.Array:
+    """Cross-entropy over the vocab without materializing full-seq f32
+    logits: scan over sequence chunks (bounds peak memory to
+    B*chunk*V).  ``x``: (B, S, d); ``labels``/``mask``: (B, S)."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    rem = s - n_chunks * chunk
+
+    def chunk_loss(xc, yc, mc):
+        logits = unembed(xc, unembed_w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc)
+
+    def body(carry, inp):
+        xc, yc, mc = inp
+        return carry + chunk_loss(xc, yc, mc), ()
+
+    xs = (x[:, :n_chunks * chunk].reshape(b, n_chunks, chunk, d)
+          .transpose(1, 0, 2, 3))
+    ys = (labels[:, :n_chunks * chunk].reshape(b, n_chunks, chunk)
+          .transpose(1, 0, 2))
+    ms = (mask[:, :n_chunks * chunk].reshape(b, n_chunks, chunk)
+          .transpose(1, 0, 2).astype(jnp.float32))
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, ys, ms))
+    if rem:
+        total = total + chunk_loss(x[:, -rem:], labels[:, -rem:],
+                                   mask[:, -rem:].astype(jnp.float32))
+    denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    return total / denom
+
+
+# ----------------------------------------------------------------------
+# Misc
+# ----------------------------------------------------------------------
+
+def causal_positions(batch: int, seq: int) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+
+
+def count_params(table: ParamTable) -> int:
+    total = 0
+    for shape, _ in table.values():
+        n = 1
+        for d in shape:
+            n *= int(d)  # python ints: no int32 overflow on 7B+ models
+        total += n
+    return total

@@ -1,0 +1,314 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs``
+feeds precomputed frame embeddings (B, S_enc, d_model).  The
+transformer backbone (12L encoder + 12L decoder, cross-attention,
+pre-LN, GELU MLP, biased projections) is exact.  Positions are
+sinusoidal (whisper's decoder uses a learned table; sinusoidal keeps
+the table independent of the assigned 4k-32k shape cells — noted as a
+deviation in DESIGN.md §7).
+
+Decode caches: per-decoder-layer self-attention KV (written per step)
+plus cross-attention KV (computed once at prefill, static afterwards).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention
+from repro.models.common import (ParamTable, Params, chunked_softmax_xent,
+                                 layer_norm, merge_tables, prefix_table,
+                                 stack_table, unembed)
+
+Cache = Dict[str, Any]
+
+
+def sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------
+# Param tables
+# ----------------------------------------------------------------------
+
+def _attn_table(cfg: ModelConfig, name: str) -> ParamTable:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    return {
+        f"{name}.wq": ((d, h, hd), ("d_model", "heads", "head_dim")),
+        f"{name}.wk": ((d, h, hd), ("d_model", "heads", "head_dim")),
+        f"{name}.wv": ((d, h, hd), ("d_model", "heads", "head_dim")),
+        f"{name}.wo": ((h, hd, d), ("heads", "head_dim", "d_model")),
+        f"{name}.bq": ((h, hd), ("heads", "head_dim")),
+        f"{name}.bv": ((h, hd), ("heads", "head_dim")),
+        f"{name}.bo": ((d,), (None,)),
+        f"{name}_ln.scale": ((d,), (None,)),
+        f"{name}_ln.bias": ((d,), (None,)),
+    }
+
+
+def _mlp_table(cfg: ModelConfig) -> ParamTable:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mlp.w_in": ((d, f), ("d_model", "d_ff")),
+        "mlp.b_in": ((f,), ("d_ff",)),
+        "mlp.w_out": ((f, d), ("d_ff", "d_model")),
+        "mlp.b_out": ((d,), (None,)),
+        "mlp_ln.scale": ((d,), (None,)),
+        "mlp_ln.bias": ((d,), (None,)),
+    }
+
+
+def enc_block_table(cfg: ModelConfig) -> ParamTable:
+    return merge_tables(_attn_table(cfg, "self"), _mlp_table(cfg))
+
+
+def dec_block_table(cfg: ModelConfig) -> ParamTable:
+    return merge_tables(_attn_table(cfg, "self"), _attn_table(cfg, "cross"),
+                        _mlp_table(cfg))
+
+
+def encdec_table(cfg: ModelConfig) -> ParamTable:
+    return merge_tables(
+        {
+            "embed": ((cfg.vocab_size, cfg.d_model), ("vocab", "d_model")),
+            "enc_ln_post.scale": ((cfg.d_model,), (None,)),
+            "enc_ln_post.bias": ((cfg.d_model,), (None,)),
+            "dec_ln_post.scale": ((cfg.d_model,), (None,)),
+            "dec_ln_post.bias": ((cfg.d_model,), (None,)),
+        },
+        prefix_table("enc", stack_table(enc_block_table(cfg),
+                                        cfg.n_encoder_layers)),
+        prefix_table("dec", stack_table(dec_block_table(cfg),
+                                        cfg.n_layers)),
+    )
+
+
+# ----------------------------------------------------------------------
+# Sub-layers
+# ----------------------------------------------------------------------
+
+def _proj_qkv(params, name, xq, xkv):
+    q = jnp.einsum("bsd,dhk->bshk", xq, params[f"{name}.wq"]) \
+        + params[f"{name}.bq"]
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params[f"{name}.wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params[f"{name}.wv"]) \
+        + params[f"{name}.bv"]
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))
+
+
+def _out_proj(params, name, out):
+    return jnp.einsum("bshk,hkd->bsd", out.transpose(0, 2, 1, 3),
+                      params[f"{name}.wo"]) + params[f"{name}.bo"]
+
+
+def _mlp(params, x):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["mlp.w_in"])
+                    + params["mlp.b_in"])
+    return jnp.einsum("bsf,fd->bsd", h, params["mlp.w_out"]) \
+        + params["mlp.b_out"]
+
+
+def _ln(params, name, x, eps):
+    return layer_norm(x, params[f"{name}.scale"], params[f"{name}.bias"],
+                      eps)
+
+
+# ----------------------------------------------------------------------
+# Encoder
+# ----------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, rules, params: Params,
+           frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d) precomputed embeddings (stub frontend)."""
+    b, s, d = frames.shape
+    x = frames + sinusoid(jnp.arange(s), d)[None].astype(frames.dtype)
+    x = rules.constraint(x, "batch", "seq", None)
+
+    def body(xc, p_i):
+        h = _ln(p_i, "self_ln", xc, cfg.norm_eps)
+        q, k, v = _proj_qkv(p_i, "self", h, h)
+        q = rules.constraint(q, "batch", "act_heads", None, None)
+        a = attention.full_attention(q, k, v, causal=False,
+                                     q_block=cfg.q_block)
+        xc = xc + _out_proj(p_i, "self", a)
+        h = _ln(p_i, "mlp_ln", xc, cfg.norm_eps)
+        xc = xc + _mlp(p_i, h)
+        xc = rules.constraint(xc, "batch", "seq", None)
+        return xc, ()
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    enc_params = {k[len("enc."):]: v for k, v in params.items()
+                  if k.startswith("enc.")}
+    x, _ = jax.lax.scan(body, x, enc_params)
+    return _ln(params, "enc_ln_post", x, cfg.norm_eps)
+
+
+# ----------------------------------------------------------------------
+# Decoder
+# ----------------------------------------------------------------------
+
+def _dec_blocks(cfg: ModelConfig, rules, params: Params, x: jax.Array, *,
+                mode: str, caches: Optional[Cache], enc_out: Optional[jax.Array],
+                positions: jax.Array) -> Tuple[jax.Array, Optional[Cache]]:
+    dec_params = {k[len("dec."):]: v for k, v in params.items()
+                  if k.startswith("dec.")}
+
+    if mode == "train":
+        def body(xc, p_i):
+            h = _ln(p_i, "self_ln", xc, cfg.norm_eps)
+            q, k, v = _proj_qkv(p_i, "self", h, h)
+            q = rules.constraint(q, "batch", "act_heads", None, None)
+            a = attention.full_attention(q, k, v, causal=True,
+                                         q_block=cfg.q_block)
+            xc = xc + _out_proj(p_i, "self", a)
+            h = _ln(p_i, "cross_ln", xc, cfg.norm_eps)
+            q, k, v = _proj_qkv(p_i, "cross", h, enc_out)
+            a = attention.full_attention(q, k, v, causal=False,
+                                         q_block=cfg.q_block)
+            xc = xc + _out_proj(p_i, "cross", a)
+            h = _ln(p_i, "mlp_ln", xc, cfg.norm_eps)
+            xc = xc + _mlp(p_i, h)
+            xc = rules.constraint(xc, "batch", "seq", None)
+            return xc, ()
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, dec_params)
+        return x, None
+
+    if mode == "prefill":
+        def body_p(xc, p_i):
+            h = _ln(p_i, "self_ln", xc, cfg.norm_eps)
+            q, k, v = _proj_qkv(p_i, "self", h, h)
+            q = rules.constraint(q, "batch", "act_heads", None, None)
+            a = attention.full_attention(q, k, v, causal=True,
+                                         q_block=cfg.q_block)
+            xc = xc + _out_proj(p_i, "self", a)
+            h = _ln(p_i, "cross_ln", xc, cfg.norm_eps)
+            qc, kc, vc = _proj_qkv(p_i, "cross", h, enc_out)
+            a = attention.full_attention(qc, kc, vc, causal=False,
+                                         q_block=cfg.q_block)
+            xc = xc + _out_proj(p_i, "cross", a)
+            h = _ln(p_i, "mlp_ln", xc, cfg.norm_eps)
+            xc = xc + _mlp(p_i, h)
+            xc = rules.constraint(xc, "batch", "seq", None)
+            cache = {
+                "self_k": rules.constraint(k, "batch", "act_kv_heads",
+                                           "kv_seq", None),
+                "self_v": rules.constraint(v, "batch", "act_kv_heads",
+                                           "kv_seq", None),
+                "cross_k": rules.constraint(kc, "batch", "act_kv_heads",
+                                            "kv_seq", None),
+                "cross_v": rules.constraint(vc, "batch", "act_kv_heads",
+                                            "kv_seq", None),
+            }
+            return xc, cache
+        x, cache = jax.lax.scan(body_p, x, dec_params)
+        return x, cache
+
+    # decode: unrolled layers, per-layer caches (see lm.run_blocks)
+    idx = positions[0, 0]
+    new_caches: Cache = {}
+    for j in range(cfg.n_layers):
+        p_i = jax.tree.map(lambda a, j=j: a[j], dec_params)
+        c_i = caches[f"dec.l{j}"]
+        h = _ln(p_i, "self_ln", x, cfg.norm_eps)
+        q, k, v = _proj_qkv(p_i, "self", h, h)
+        kc, vc = attention.update_cache(c_i["self_k"], c_i["self_v"],
+                                        k, v, idx)
+        kc = rules.constraint(kc, "batch", "act_kv_heads", "kv_seq", None)
+        vc = rules.constraint(vc, "batch", "act_kv_heads", "kv_seq", None)
+        valid = jnp.arange(kc.shape[2])[None, :] <= idx
+        valid = jnp.broadcast_to(valid, (x.shape[0], kc.shape[2]))
+        a = attention.decode_attention(q, kc, vc, kv_valid=valid)
+        x = x + _out_proj(p_i, "self", a)
+        h = _ln(p_i, "cross_ln", x, cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h, p_i["cross.wq"]) \
+            + p_i["cross.bq"]
+        a = attention.decode_attention(qx.transpose(0, 2, 1, 3),
+                                       c_i["cross_k"], c_i["cross_v"])
+        x = x + _out_proj(p_i, "cross", a)
+        h = _ln(p_i, "mlp_ln", x, cfg.norm_eps)
+        x = x + _mlp(p_i, h)
+        new_c = dict(c_i)
+        new_c["self_k"], new_c["self_v"] = kc, vc
+        new_caches[f"dec.l{j}"] = new_c
+    return x, new_caches
+
+
+# ----------------------------------------------------------------------
+# Entry points (match lm.py signatures)
+# ----------------------------------------------------------------------
+
+def train_loss(cfg: ModelConfig, rules, params: Params,
+               batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+    enc_out = encode(cfg, rules, params, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + sinusoid(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _ = _dec_blocks(cfg, rules, params, x, mode="train", caches=None,
+                       enc_out=enc_out, positions=positions)
+    x = _ln(params, "dec_ln_post", x, cfg.norm_eps)
+    loss = chunked_softmax_xent(x, batch["labels"], params["embed"],
+                                batch["mask"], cfg.logit_chunk)
+    return loss, {"xent": loss, "loss": loss}
+
+
+def prefill(cfg: ModelConfig, rules, params: Params,
+            batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Cache]:
+    enc_out = encode(cfg, rules, params, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + sinusoid(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, cache = _dec_blocks(cfg, rules, params, x, mode="prefill",
+                           caches=None, enc_out=enc_out,
+                           positions=positions)
+    x = _ln(params, "dec_ln_post", x[:, -1:], cfg.norm_eps)
+    logits = unembed(x, params["embed"]).astype(jnp.float32)
+    per_layer = {f"dec.l{j}": jax.tree.map(lambda a, j=j: a[j], cache)
+                 for j in range(cfg.n_layers)}
+    return logits, per_layer
+
+
+def decode_step(cfg: ModelConfig, rules, params: Params, caches: Cache,
+                batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Cache]:
+    tokens = batch["tokens"]
+    b, _ = tokens.shape
+    idx = batch["index"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + sinusoid(idx[None, None], cfg.d_model).astype(x.dtype)
+    positions = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+    x, cache = _dec_blocks(cfg, rules, params, x, mode="decode",
+                           caches=caches, enc_out=None, positions=positions)
+    x = _ln(params, "dec_ln_post", x, cfg.norm_eps)
+    logits = unembed(x, params["embed"]).astype(jnp.float32)
+    logits = rules.constraint(logits, "batch", None, "act_vocab")
+    return logits, cache
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq: int,
+                dtype=jnp.bfloat16) -> Cache:
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    s_enc = max(int(seq * cfg.encoder_seq_ratio), 1)
+    return {f"dec.l{j}": {
+        "self_k": jnp.zeros((batch, h, seq, hd), dtype=dtype),
+        "self_v": jnp.zeros((batch, h, seq, hd), dtype=dtype),
+        "cross_k": jnp.zeros((batch, h, s_enc, hd), dtype=dtype),
+        "cross_v": jnp.zeros((batch, h, s_enc, hd), dtype=dtype),
+    } for j in range(cfg.n_layers)}

@@ -1,0 +1,301 @@
+"""Generic decoder LM: embeddings + block segments + unembedding.
+
+A model is a list of *segments*; each segment is ``n`` layers of one
+block kind.  Uniform segments are scanned (``lax.scan`` over stacked
+params — one compiled layer body regardless of depth, which keeps the
+80-layer dry-runs tractable) and rematerialized in training.
+Non-uniform prefixes/suffixes (DeepSeek's dense first layer,
+RecurrentGemma's trailing recurrent layers) are unrolled.
+
+Block kinds: dense (GQA/MQA + SwiGLU), moe ((MLA|GQA) + MoE),
+dense_mla (MLA + dense FFN), rwkv, rglru, local (windowed attention),
+pattern (RecurrentGemma's (rglru, rglru, local) unit).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks_attn, blocks_moe, blocks_rnn
+from repro.models.common import (ParamTable, Params, chunked_softmax_xent,
+                                 merge_tables, prefix_table, rms_norm,
+                                 stack_table, unembed)
+
+
+class Segment(NamedTuple):
+    kind: str
+    n: int
+    scanned: bool
+
+
+def plan_segments(cfg: ModelConfig) -> List[Segment]:
+    if cfg.family in ("dense", "vlm"):
+        return [Segment("dense", cfg.n_layers, cfg.use_scan)]
+    if cfg.family == "moe":
+        fd = cfg.moe.first_dense_layers
+        segs: List[Segment] = []
+        if fd:
+            segs.append(Segment("dense_mla", fd, False))
+        segs.append(Segment("moe", cfg.n_layers - fd, cfg.use_scan))
+        return segs
+    if cfg.family == "ssm":
+        return [Segment("rwkv", cfg.n_layers, cfg.use_scan)]
+    if cfg.family == "hybrid":
+        p = len(cfg.block_pattern)
+        reps, rem = divmod(cfg.n_layers, p)
+        segs = [Segment("pattern", reps, cfg.use_scan)]
+        for k in range(rem):  # remainder layers follow the pattern order
+            segs.append(Segment(cfg.block_pattern[k], 1, False))
+        return segs
+    raise ValueError(f"family {cfg.family} not handled by lm.py")
+
+
+# ----------------------------------------------------------------------
+# Block registry
+# ----------------------------------------------------------------------
+
+def _local_apply(cfg, rules, params, x, *, mode, cache, positions):
+    return blocks_attn.apply(cfg, rules, params, x, mode=mode, cache=cache,
+                             positions=positions,
+                             local_window=cfg.local_window)
+
+
+def _pattern_table(cfg: ModelConfig) -> ParamTable:
+    tabs = []
+    for j, kind in enumerate(cfg.block_pattern):
+        tabs.append(prefix_table(f"p{j}", BLOCKS[kind][0](cfg)))
+    return merge_tables(*tabs)
+
+
+def _pattern_apply(cfg, rules, params, x, *, mode, cache, positions):
+    new_cache = {} if mode in ("decode", "prefill") else None
+    aux: Dict[str, jax.Array] = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        sub = {k[len(f"p{j}."):]: v for k, v in params.items()
+               if k.startswith(f"p{j}.")}
+        c_in = cache.get(f"p{j}") if cache else None
+        x, c_out, a = BLOCKS[kind][1](cfg, rules, sub, x, mode=mode,
+                                      cache=c_in, positions=positions)
+        if new_cache is not None:
+            new_cache[f"p{j}"] = c_out
+        for k, v in a.items():
+            aux[k] = aux.get(k, 0.0) + v
+    return x, new_cache, aux
+
+
+def _pattern_cache(cfg, batch, seq, dtype=jnp.bfloat16):
+    return {f"p{j}": BLOCKS[kind][2](cfg, batch, seq, dtype)
+            for j, kind in enumerate(cfg.block_pattern)}
+
+
+def _local_cache(cfg, batch, seq, dtype=jnp.bfloat16):
+    return blocks_attn.init_attn_cache(cfg, batch, seq, dtype)
+
+
+BLOCKS: Dict[str, Tuple[Any, Any, Any]] = {
+    "dense": (blocks_attn.table, blocks_attn.apply, blocks_attn.init_cache),
+    "moe": (blocks_moe.table, blocks_moe.apply, blocks_moe.init_cache),
+    "dense_mla": (blocks_moe.dense_mla_table, blocks_moe.dense_mla_apply,
+                  blocks_moe.init_cache),
+    "rwkv": (blocks_rnn.table, blocks_rnn.apply, blocks_rnn.init_cache),
+    "rglru": (blocks_rnn.rglru_table, blocks_rnn.rglru_block_apply,
+              blocks_rnn.init_cache_rglru),
+    "local": (blocks_attn.table, _local_apply, _local_cache),
+}
+BLOCKS["pattern"] = (_pattern_table, _pattern_apply, _pattern_cache)
+
+
+# ----------------------------------------------------------------------
+# Whole-model param table
+# ----------------------------------------------------------------------
+
+def lm_table(cfg: ModelConfig) -> ParamTable:
+    tabs = [{
+        "embed": ((cfg.vocab_size, cfg.d_model), ("vocab", "d_model")),
+        "final_norm.scale": ((cfg.d_model,), (None,)),
+    }]
+    if not cfg.tie_embeddings:
+        tabs.append({"unembed": ((cfg.vocab_size, cfg.d_model),
+                                 ("vocab", "d_model"))})
+    if cfg.family == "vlm":
+        # stub frontend: a projection applied to precomputed patch embeds
+        tabs.append({"patch_proj": ((cfg.d_model, cfg.d_model),
+                                    ("d_model", None))})
+    for i, seg in enumerate(plan_segments(cfg)):
+        tab = BLOCKS[seg.kind][0](cfg)
+        if seg.scanned:
+            tabs.append(prefix_table(f"seg{i}", stack_table(tab, seg.n)))
+        else:
+            for j in range(seg.n):
+                tabs.append(prefix_table(f"seg{i}.l{j}", tab))
+    return merge_tables(*tabs)
+
+
+def _seg_params(params: Params, i: int, j: Optional[int] = None) -> Params:
+    pre = f"seg{i}." if j is None else f"seg{i}.l{j}."
+    return {k[len(pre):]: v for k, v in params.items() if k.startswith(pre)}
+
+
+# ----------------------------------------------------------------------
+# Forward pass over segments
+# ----------------------------------------------------------------------
+
+def run_blocks(cfg: ModelConfig, rules, params: Params, x: jax.Array, *,
+               mode: str, caches: Optional[Dict[str, Any]],
+               positions: jax.Array
+               ) -> Tuple[jax.Array, Optional[Dict[str, Any]],
+                          Dict[str, jax.Array]]:
+    new_caches: Optional[Dict[str, Any]] = (
+        {} if mode in ("decode", "prefill") else None)
+    aux_total: Dict[str, jax.Array] = {}
+
+    for i, seg in enumerate(plan_segments(cfg)):
+        apply_fn = BLOCKS[seg.kind][1]
+        if seg.scanned:
+            sp = _seg_params(params, i)
+
+            if mode == "train":
+                def body(xc, p_i):
+                    y, _, aux = apply_fn(cfg, rules, p_i, xc, mode="train",
+                                         cache=None, positions=positions)
+                    return y, aux
+                if cfg.remat:
+                    body = jax.checkpoint(
+                        body, policy=jax.checkpoint_policies.nothing_saveable)
+                x, auxs = jax.lax.scan(body, x, sp)
+                for k, v in auxs.items():
+                    aux_total[k] = aux_total.get(k, 0.0) + jnp.sum(v)
+            elif mode == "prefill":
+                def body_p(xc, p_i):
+                    y, c, _ = apply_fn(cfg, rules, p_i, xc, mode="prefill",
+                                       cache=None, positions=positions)
+                    return y, c
+                x, seg_cache = jax.lax.scan(body_p, x, sp)
+                # emit per-layer caches (the decode layout): scanning
+                # decode over a stacked cache carry would force whole-
+                # cache dynamic-update-slices + hoisted converts;
+                # unrolled decode updates each layer's cache in place.
+                for j in range(seg.n):
+                    new_caches[f"seg{i}.l{j}"] = jax.tree.map(
+                        lambda a, j=j: a[j], seg_cache)
+            else:  # decode: unrolled layers, per-layer caches
+                for j in range(seg.n):
+                    p_j = jax.tree.map(lambda a, j=j: a[j], sp)
+                    key = f"seg{i}.l{j}"
+                    x, c_out, _ = apply_fn(cfg, rules, p_j, x,
+                                           mode="decode",
+                                           cache=caches[key],
+                                           positions=positions)
+                    new_caches[key] = c_out
+        else:
+            for j in range(seg.n):
+                sp = _seg_params(params, i, j)
+                key = f"seg{i}.l{j}"
+                c_in = caches.get(key) if caches else None
+                x, c_out, aux = apply_fn(cfg, rules, sp, x, mode=mode,
+                                         cache=c_in, positions=positions)
+                if new_caches is not None:
+                    new_caches[key] = c_out
+                for k, v in aux.items():
+                    aux_total[k] = aux_total.get(k, 0.0) + v
+    return x, new_caches, aux_total
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq: int,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Per-layer cache layout (matches unrolled decode / prefill out)."""
+    caches: Dict[str, Any] = {}
+    for i, seg in enumerate(plan_segments(cfg)):
+        cache_fn = BLOCKS[seg.kind][2]
+        for j in range(seg.n):
+            caches[f"seg{i}.l{j}"] = cache_fn(cfg, batch, seq, dtype)
+    return caches
+
+
+# ----------------------------------------------------------------------
+# Embedding front ends
+# ----------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, rules, params: Params,
+                 batch: Dict[str, jax.Array], *,
+                 mode: str) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x (B,S,d), positions (B,S)).
+
+    VLM: precomputed patch embeddings (stub frontend) are projected and
+    prepended to the token embeddings.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm" and mode != "decode":
+        patches = batch["patches"].astype(x.dtype)      # (B, P, d)
+        patches = jnp.einsum("bpd,de->bpe", patches, params["patch_proj"])
+        x = jnp.concatenate([patches, x], axis=1)
+    s_full = x.shape[1]
+    if mode == "decode":
+        positions = jnp.broadcast_to(batch["index"][None, None],
+                                     (b, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s_full, dtype=jnp.int32),
+                                     (b, s_full))
+    x = rules.constraint(x, "batch", "seq", None)
+    return x, positions
+
+
+# ----------------------------------------------------------------------
+# Entry points
+# ----------------------------------------------------------------------
+
+def train_loss(cfg: ModelConfig, rules, params: Params,
+               batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+    x, positions = embed_inputs(cfg, rules, params, batch, mode="train")
+    x, _, aux = run_blocks(cfg, rules, params, x, mode="train",
+                           caches=None, positions=positions)
+    x = rms_norm(x, params["final_norm.scale"], cfg.norm_eps)
+    if cfg.family == "vlm":     # loss only on the text positions
+        x = x[:, batch["patches"].shape[1]:]
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    loss = chunked_softmax_xent(x, batch["labels"], w, batch["mask"],
+                                cfg.logit_chunk)
+    total = loss
+    metrics = {"xent": loss}
+    for k, v in aux.items():
+        metrics[k] = v
+        if k in ("moe_aux", "moe_z"):
+            total = total + v
+    metrics["loss"] = total
+    return total, metrics
+
+
+def prefill(cfg: ModelConfig, rules, params: Params,
+            batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Process the full prompt; return (last-position logits, caches)."""
+    x, positions = embed_inputs(cfg, rules, params, batch, mode="prefill")
+    x, caches, _ = run_blocks(cfg, rules, params, x, mode="prefill",
+                              caches=None, positions=positions)
+    x = rms_norm(x[:, -1:], params["final_norm.scale"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, w).astype(jnp.float32)
+    logits = rules.constraint(logits, "batch", None, "act_vocab")
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, rules, params: Params,
+                caches: Dict[str, Any], batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token for every sequence in the batch.
+
+    ``batch`` = {"tokens": (B, 1), "index": scalar position}.
+    """
+    x, positions = embed_inputs(cfg, rules, params, batch, mode="decode")
+    x, caches, _ = run_blocks(cfg, rules, params, x, mode="decode",
+                              caches=caches, positions=positions)
+    x = rms_norm(x, params["final_norm.scale"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(x, w).astype(jnp.float32)
+    logits = rules.constraint(logits, "batch", None, "act_vocab")
+    return logits, caches

@@ -1,0 +1,6 @@
+"""Serving substrate: jitted prefill/decode + continuous batching."""
+from repro.serve.engine import (Request, ServingEngine, make_serve_fns,
+                                jit_decode_step, cache_shardings)
+
+__all__ = ["Request", "ServingEngine", "make_serve_fns", "jit_decode_step",
+           "cache_shardings"]

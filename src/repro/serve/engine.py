@@ -1,0 +1,303 @@
+"""Serving substrate: jitted prefill / decode steps + a continuous-
+batching engine with twin-driven admission.
+
+``make_serve_fns`` builds the two jitted entry points the dry-run
+lowers (``serve_step`` is the decode one — one new token for the whole
+batch against a ``seq_len`` KV cache).
+
+``ServingEngine`` is the host-side loop: a fixed pool of batch slots,
+each slot running one request; finished slots are refilled from the
+admission queue (continuous batching).  Admission is pluggable — the
+``examples/serve_twin.py`` driver wires it to SchedTwin so the paper's
+adaptive policy selection decides which queued request class to admit
+next, closing the same feedback loop as cluster scheduling but at
+request granularity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import api
+
+Params = Dict[str, jax.Array]
+
+
+# ----------------------------------------------------------------------
+# Jitted model entry points
+# ----------------------------------------------------------------------
+
+# (batch_axis, head_axis, seq_axis, width_axis) counted from the END of
+# the leaf shape, per cache-leaf name.  None = that axis doesn't exist.
+_CACHE_LAYOUT = {
+    # attention KV: (..., B, H, S, D)
+    "k": (-4, -3, -2, None), "v": (-4, -3, -2, None),
+    "self_k": (-4, -3, -2, None), "self_v": (-4, -3, -2, None),
+    "cross_k": (-4, -3, -2, None), "cross_v": (-4, -3, -2, None),
+    # MLA compressed cache: (..., B, S, R)
+    "c_kv": (-3, None, -2, None), "k_pe": (-3, None, -2, None),
+    # RWKV: state (..., B, H, N, N); token-shift (..., B, D)
+    "wkv": (-4, -3, None, None),
+    "tm_x": (-2, None, None, None), "cm_x": (-2, None, None, None),
+    # RG-LRU: conv history (..., B, K, W); hidden (..., B, W)
+    "conv": (-3, None, None, -1),
+    "h": (-2, None, None, -1),
+}
+
+
+def cache_shardings(cfg: ModelConfig, rules: ShardingRules, caches: Any):
+    """Shard every cache leaf by name: batch on the DP axes; heads on
+    `model` when divisible (GQA with enough KV heads); otherwise the
+    sequence axis on `model` when the rules enable distributed
+    flash-decode (``kv_seq``); recurrent widths on `model` (matching
+    the RG-LRU weight sharding)."""
+    mesh = rules.mesh
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model = "model" if "model" in mesh.shape else None
+    kv_seq_on = rules.rules.get("kv_seq") is not None
+
+    def spec_of(path, leaf) -> NamedSharding:
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        layout = _CACHE_LAYOUT.get(name)
+        shape = leaf.shape
+        parts: List[Any] = [None] * len(shape)
+        if layout is None or len(shape) < 2:
+            return NamedSharding(mesh, P(*parts))
+        b_ax, h_ax, s_ax, w_ax = layout
+
+        def ok(ax) -> bool:
+            return ax is not None and -ax <= len(shape)
+
+        if ok(b_ax) and dp and shape[b_ax] % _size(mesh, dp) == 0:
+            parts[len(shape) + b_ax] = dp if len(dp) > 1 else dp[0]
+        if model:
+            if ok(h_ax) and shape[h_ax] % mesh.shape[model] == 0:
+                parts[len(shape) + h_ax] = model
+            elif (ok(s_ax) and kv_seq_on
+                  and shape[s_ax] % mesh.shape[model] == 0):
+                parts[len(shape) + s_ax] = model
+            elif ok(w_ax) and shape[w_ax] % mesh.shape[model] == 0:
+                parts[len(shape) + w_ax] = model
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(spec_of, caches)
+
+
+def _size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def make_serve_fns(cfg: ModelConfig, rules: ShardingRules):
+    """Returns (prefill_fn, decode_fn), both ready to jit."""
+
+    def prefill_fn(params: Params, batch: Dict[str, jax.Array]):
+        return api.prefill(cfg, rules, params, batch)
+
+    def decode_fn(params: Params, caches: Any,
+                  tokens: jax.Array, index: jax.Array):
+        logits, caches = api.decode_step(cfg, rules, params, caches,
+                                         {"tokens": tokens, "index": index})
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_fn, decode_fn
+
+
+def jit_decode_step(cfg: ModelConfig, rules: ShardingRules, caches_ab):
+    """jit of one decode step with explicit cache shardings (the
+    ``serve_step`` the dry-run lowers for decode_* / long_* cells)."""
+    _, decode_fn = make_serve_fns(cfg, rules)
+    mesh = rules.mesh
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    param_sh = rules.table_shardings(api.param_table(cfg))
+    cache_sh = cache_shardings(cfg, rules, caches_ab)
+    batch = jax.tree.leaves(caches_ab)[0].shape  # just for divisibility
+    b = _batch_size(caches_ab)
+    if dp and b % _size(mesh, dp) == 0:
+        dp_spec = dp if len(dp) > 1 else dp[0]
+        tok_in = NamedSharding(mesh, P(dp_spec, None))
+        tok_out = NamedSharding(mesh, P(dp_spec))   # argmax output (B,)
+    else:  # tiny batches (long_500k B=1): replicate tokens
+        tok_in = NamedSharding(mesh, P(None, None))
+        tok_out = NamedSharding(mesh, P(None))
+    del batch
+    return jax.jit(
+        decode_fn,
+        in_shardings=(param_sh, cache_sh, tok_in,
+                      NamedSharding(mesh, P())),
+        out_shardings=(tok_out, cache_sh),
+        donate_argnums=(1,))
+
+
+def _batch_size(caches_ab: Any) -> int:
+    """Batch size from any attn/state cache leaf (see _CACHE_LAYOUT)."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches_ab)[0]:
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        layout = _CACHE_LAYOUT.get(name)
+        if layout and layout[0] is not None and -layout[0] <= len(leaf.shape):
+            return leaf.shape[len(leaf.shape) + layout[0]]
+    raise ValueError("no recognizable cache leaf")
+
+
+# ----------------------------------------------------------------------
+# Continuous batching engine
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray          # (S_prompt,) int32
+    max_new_tokens: int
+    arrival_t: float = 0.0
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+
+
+class ServingEngine:
+    """Slot-based continuous batching over a single decode batch.
+
+    The engine keeps ``batch_slots`` sequences in flight.  Each loop
+    iteration decodes one token for every active slot; finished slots
+    are refilled via ``admit()`` (FIFO by default; the twin-driven
+    driver overrides admission order).  Prefill for an admitted request
+    runs per-slot (the jitted prefill is batch-1 here for simplicity;
+    batched prefill is a straightforward extension).
+    """
+
+    def __init__(self, cfg: ModelConfig, rules: ShardingRules, params,
+                 batch_slots: int, max_seq: int,
+                 admission: Optional[Callable[[List[Request]], int]] = None
+                 ) -> None:
+        self.cfg = cfg
+        self.rules = rules
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.admission = admission
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.clock = 0.0
+
+        prefill_fn, decode_fn = make_serve_fns(cfg, rules)
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self.caches = api.init_caches(cfg, batch_slots, max_seq)
+        self._tokens = np.zeros((batch_slots, 1), dtype=np.int32)
+        self._pos = np.zeros((batch_slots,), dtype=np.int64)
+
+    # -- admission ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.arrival_t = self.clock
+        self.queue.append(req)
+
+    def _admit_next(self) -> Optional[Request]:
+        if not self.queue:
+            return None
+        idx = self.admission(self.queue) if self.admission else 0
+        return self.queue.pop(idx)
+
+    def _fill_slot(self, slot: int, req: Request) -> None:
+        prompt = jnp.asarray(req.prompt[None, :], dtype=jnp.int32)
+        batch = {"tokens": prompt}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (1, prompt.shape[1], self.cfg.d_model), dtype=jnp.bfloat16)
+        logits, caches1 = self._prefill(self.params, batch)
+        tok = int(jnp.argmax(logits[0, -1]))
+        # copy per-request cache into the batched slot
+        self.caches = jax.tree.map(
+            lambda big, small: _write_slot(big, small, slot),
+            self.caches, caches1)
+        req.output.append(tok)
+        req.first_token_t = self.clock
+        self._tokens[slot, 0] = tok
+        self._pos[slot] = len(req.prompt)
+        self.active[slot] = req
+
+    # -- main loop ------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration; returns #active slots."""
+        for s in range(self.slots):
+            if self.active[s] is None:
+                req = self._admit_next()
+                if req is not None:
+                    self._fill_slot(s, req)
+        if all(a is None for a in self.active):
+            return 0
+
+        index = jnp.asarray(int(self._pos.max()), dtype=jnp.int32)
+        toks = jnp.asarray(self._tokens)
+        next_tok, self.caches = self._decode(self.params, self.caches,
+                                             toks, index)
+        nt = np.asarray(next_tok)
+        self.clock += 1.0
+        n_active = 0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nt[s])
+            req.output.append(tok)
+            self._tokens[s, 0] = tok
+            self._pos[s] += 1
+            if (len(req.output) >= req.max_new_tokens
+                    or self._pos[s] >= self.max_seq - 1):
+                req.done = True
+                req.finish_t = self.clock
+                self.active[s] = None
+            else:
+                n_active += 1
+        return n_active + sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_iters: int = 100_000) -> None:
+        for _ in range(max_iters):
+            if self.step() == 0 and not self.queue:
+                return
+        raise RuntimeError("serving engine did not drain")
+
+
+def _write_slot(big: jax.Array, small: jax.Array, slot: int) -> jax.Array:
+    """Write a batch-1 cache leaf into slot ``slot`` of the batched
+    cache.  Handles (B, ...) and scanned (L, B, ...) layouts; the
+    batch-1 prefill cache may be shorter in the sequence axis."""
+    if big.ndim == 0 or big.shape == small.shape:
+        return small
+    # locate batch axis: the axis where big==slots and small==1
+    for ax in range(small.ndim):
+        if small.shape[ax] == 1 and big.shape[ax] != small.shape[ax]:
+            batch_ax = ax
+            break
+    else:
+        return big
+    # pad the (shorter) sequence axis of `small` up to big's length
+    pads = []
+    for ax in range(small.ndim):
+        if ax == batch_ax:
+            pads.append((0, 0))
+        else:
+            pads.append((0, big.shape[ax] - small.shape[ax]))
+    small = jnp.pad(small, pads)
+    start = [0] * big.ndim
+    start[batch_ax] = slot
+    return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                        tuple(start))

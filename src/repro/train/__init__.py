@@ -1,0 +1,12 @@
+"""Training substrate: optimizer, microbatched step, grad compression."""
+from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                   init_opt_state, lr_at, global_norm)
+from repro.train.train_step import (TrainState, init_train_state,
+                                    abstract_train_state, make_train_step,
+                                    jit_train_step, state_shardings,
+                                    batch_shardings)
+
+__all__ = ["OptimizerConfig", "OptState", "adamw_update", "init_opt_state",
+           "lr_at", "global_norm", "TrainState", "init_train_state",
+           "abstract_train_state", "make_train_step", "jit_train_step",
+           "state_shardings", "batch_shardings"]

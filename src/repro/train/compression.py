@@ -1,0 +1,88 @@
+"""Gradient compression with error feedback (distributed-optimization
+substrate, beyond-paper).
+
+At 1000+-node scale the data-parallel gradient all-reduce dominates the
+interconnect; int8 block-quantized gradients cut those bytes 4x.  The
+scheme is EF-SGD-style error feedback:
+
+    acc   = grad + error            (carry what compression dropped)
+    q     = quantize(acc)           (int8 + per-block f32 scale)
+    error = acc - dequantize(q)     (next step's correction)
+
+Quantization happens *before* the (simulated) all-reduce boundary in
+``train_step``; because the compressed representation is what crosses
+the mesh, the roofline collective term for DP gradient sync shrinks by
+the same 4x (see EXPERIMENTS.md §Perf).  Error-feedback buffers live in
+the train state and are sharded like the gradients themselves.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256  # quantization block (last-dim groups)
+
+
+class Compressed(NamedTuple):
+    q: jax.Array      # int8 payload
+    scale: jax.Array  # f32 per-block scale
+
+
+def _pad_to_block(x: jax.Array) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def quantize(x: jax.Array) -> Compressed:
+    """Symmetric int8 per-block quantization of an f32 tensor."""
+    blocks, _ = _pad_to_block(x)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Compressed(q=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize(c: Compressed, shape: Tuple[int, ...]) -> jax.Array:
+    flat = (c.q.astype(jnp.float32) * c.scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_with_feedback(grads: Dict[str, jax.Array],
+                           errors: Dict[str, jax.Array]
+                           ) -> Tuple[Dict[str, jax.Array],
+                                      Dict[str, jax.Array],
+                                      jax.Array]:
+    """Returns (decompressed grads as seen post-all-reduce, new error
+    buffers, mean abs quantization error) — the lossy round trip the
+    gradients experience on the wire."""
+    out: Dict[str, jax.Array] = {}
+    new_err: Dict[str, jax.Array] = {}
+    tot_err = jnp.float32(0.0)
+    n = 0
+    for name, g in grads.items():
+        acc = g.astype(jnp.float32) + errors[name]
+        c = quantize(acc)
+        deq = dequantize(c, g.shape)
+        out[name] = deq
+        new_err[name] = acc - deq
+        tot_err = tot_err + jnp.mean(jnp.abs(new_err[name]))
+        n += 1
+    return out, new_err, tot_err / max(n, 1)
+
+
+def init_error_buffers(params: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    return {k: jnp.zeros(v.shape, dtype=jnp.float32)
+            for k, v in params.items()}
+
+
+def abstract_error_buffers(params: Any) -> Dict[str, Any]:
+    return {k: jax.ShapeDtypeStruct(v.shape, jnp.float32)
+            for k, v in params.items()}

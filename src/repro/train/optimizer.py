@@ -1,0 +1,118 @@
+"""Optimizer substrate: AdamW + cosine schedule + global-norm clipping.
+
+Pure-pytree implementation (no optax dependency).  The optimizer state
+is a pytree of the same structure as the params, so it inherits the
+params' PartitionSpecs (FSDP-sharded moments — ZeRO-style) without any
+extra sharding rules.
+
+``scale_by_schedule`` composes warmup + cosine decay; ``adamw_update``
+is a single fused-form update used inside the jitted train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    end_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    mu: Params       # first moment (f32)
+    nu: Params       # second moment (f32)
+    count: jax.Array # i32 step
+
+
+def init_opt_state(params: Params) -> OptState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params)
+    return OptState(mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros),
+                    count=jnp.zeros((), dtype=jnp.int32))
+
+
+def abstract_opt_state(params: Params) -> OptState:
+    ab = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return OptState(mu=ab, nu=ab,
+                    count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to ``end_lr_frac * peak``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    floor = cfg.peak_lr * cfg.end_lr_frac
+    cos = floor + (cfg.peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+_NO_DECAY_SUFFIXES = (".bias", "norm.scale", "norm.bias", "ln.scale",
+                      "ln.bias", ".mu", ".mu_x", ".mu_k", ".mu_r",
+                      ".decay_base", ".bonus", ".lambda",
+                      ".rgate_bias", ".igate_bias")
+
+
+def _decays(name: str) -> bool:
+    return not name.endswith(_NO_DECAY_SUFFIXES)
+
+
+def adamw_update(cfg: OptimizerConfig, params: Dict[str, jax.Array],
+                 grads: Dict[str, jax.Array], opt: OptState
+                 ) -> Tuple[Dict[str, jax.Array], OptState, Dict[str, jax.Array]]:
+    """One AdamW step over the flat param dict.  Grads are expected in
+    f32 (the accumulation dtype); params stay in their storage dtype."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = opt.count + 1
+    lr = lr_at(cfg, count)
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    new_params: Dict[str, jax.Array] = {}
+    new_mu: Dict[str, jax.Array] = {}
+    new_nu: Dict[str, jax.Array] = {}
+    for name, p in params.items():
+        g = grads[name].astype(jnp.float32)
+        mu = cfg.b1 * opt.mu[name] + (1 - cfg.b1) * g
+        nu = cfg.b2 * opt.nu[name] + (1 - cfg.b2) * jnp.square(g)
+        upd = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        if _decays(name):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_params[name] = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        new_mu[name] = mu
+        new_nu[name] = nu
+
+    return (new_params,
+            OptState(mu=new_mu, nu=new_nu, count=count),
+            {"lr": lr, "grad_norm": gnorm})

@@ -1,0 +1,160 @@
+"""The jitted training step: microbatched grad accumulation + AdamW.
+
+``make_train_step(cfg, rules, opt_cfg)`` returns ``(step_fn,
+state_shardings, batch_shardings)`` where ``step_fn(state, batch) ->
+(state, metrics)`` is ready for ``jax.jit`` with those shardings.
+
+Memory shape: the global batch is split into ``cfg.accum_steps``
+microbatches scanned sequentially; gradients accumulate in f32 into
+FSDP-sharded buffers, so peak activation memory is one microbatch and
+the optimizer never sees unsharded state.  Optional int8 gradient
+compression with error feedback (``compress=True``) shrinks the DP
+all-reduce bytes 4x (see train/compression.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import api
+from repro.models.common import abstract_params, init_params
+from repro.train import compression
+from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                   abstract_opt_state, init_opt_state)
+
+Params = Dict[str, jax.Array]
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: OptState
+    ef: Optional[Params]   # error-feedback buffers (compression only)
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig, *,
+                     compress: bool = False) -> TrainState:
+    params = init_params(key, api.param_table(cfg))
+    return TrainState(
+        params=params,
+        opt=init_opt_state(params),
+        ef=compression.init_error_buffers(params) if compress else None)
+
+
+def abstract_train_state(cfg: ModelConfig, *,
+                         compress: bool = False) -> TrainState:
+    params = abstract_params(api.param_table(cfg))
+    return TrainState(
+        params=params,
+        opt=abstract_opt_state(params),
+        ef=compression.abstract_error_buffers(params) if compress else None)
+
+
+def state_shardings(cfg: ModelConfig, rules: ShardingRules) -> TrainState:
+    """PartitionSpecs for the train state (moments/EF like the params)."""
+    table = api.param_table(cfg)
+    p = rules.table_shardings(table)
+    return TrainState(
+        params=p,
+        opt=OptState(mu=dict(p), nu=dict(p),
+                     count=NamedSharding(rules.mesh, P())),
+        ef=None)
+
+
+def batch_shardings(cfg: ModelConfig, rules: ShardingRules
+                    ) -> Dict[str, NamedSharding]:
+    """Batch arrays are sharded over the DP axes on dim 0."""
+    dp = tuple(a for a in ("pod", "data") if a in rules.mesh.shape)
+    spec2 = NamedSharding(rules.mesh, P(dp, None))
+    spec3 = NamedSharding(rules.mesh, P(dp, None, None))
+    out = {"tokens": spec2, "labels": spec2, "mask": spec2}
+    if cfg.family == "vlm":
+        out["patches"] = spec3
+    if cfg.family == "encdec":
+        out["frames"] = spec3
+    return out
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], accum: int
+                        ) -> Dict[str, jax.Array]:
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} not divisible by accum {accum}"
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return {k: split(v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, rules: ShardingRules,
+                    opt_cfg: OptimizerConfig = OptimizerConfig(), *,
+                    compress: bool = False,
+                    accum_steps: Optional[int] = None):
+    """Returns ``step_fn(state, batch) -> (state, metrics)``."""
+    accum = accum_steps if accum_steps is not None else cfg.accum_steps
+
+    def loss_fn(params: Params, mb: Dict[str, jax.Array]):
+        return api.train_loss(cfg, rules, params, mb)
+
+    def step_fn(state: TrainState, batch: Dict[str, jax.Array]
+                ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if accum > 1:
+            mbs = _split_microbatches(batch, accum)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (loss, metrics), grads = grad_fn(state.params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return (gsum, lsum + loss), metrics
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, dtype=jnp.float32),
+                state.params)
+            (gsum, lsum), metrics_stack = jax.lax.scan(
+                body, (gzero, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics_stack)
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        ef = state.ef
+        if compress:
+            grads, ef, qerr = compression.compress_with_feedback(grads, ef)
+            metrics = dict(metrics)
+            metrics["compression_err"] = qerr
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt, ef), metrics
+
+    return step_fn
+
+
+def jit_train_step(cfg: ModelConfig, rules: ShardingRules,
+                   opt_cfg: OptimizerConfig = OptimizerConfig(), *,
+                   compress: bool = False,
+                   accum_steps: Optional[int] = None,
+                   donate: bool = True):
+    """jit-wrapped step with explicit in/out shardings (dry-run ready)."""
+    step = make_train_step(cfg, rules, opt_cfg, compress=compress,
+                           accum_steps=accum_steps)
+    ss = state_shardings(cfg, rules)
+    if compress:
+        ss = ss._replace(ef=dict(ss.params))
+    bs = batch_shardings(cfg, rules)
+    return jax.jit(
+        step,
+        in_shardings=(ss, bs),
+        out_shardings=(ss, None),
+        donate_argnums=(0,) if donate else ())

@@ -1,0 +1,76 @@
+"""Shape sweeps: wkv6 + rglru kernels vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("b,s,h,n", [
+    (1, 32, 1, 8),
+    (2, 64, 2, 16),
+    (2, 128, 4, 32),
+    (1, 256, 2, 64),      # production head size
+])
+@pytest.mark.parametrize("block_t", [16, 64])
+def test_wkv6_matches_oracle(b, s, h, n, block_t):
+    ks = jax.random.split(jax.random.PRNGKey(b * s + n), 5)
+    r = jax.random.normal(ks[0], (b, s, h, n))
+    k = jax.random.normal(ks[1], (b, s, h, n))
+    v = jax.random.normal(ks[2], (b, s, h, n))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, n)))  # (0,1)
+    u = jax.random.normal(ks[4], (h, n))
+    y, st = ops.wkv6(r, k, v, w, u, block_t=min(block_t, s))
+    y2, st2 = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st2),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_wkv6_state_streams_across_tiles():
+    """Same result whether the sequence is one tile or many."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    b, s, h, n = 1, 128, 2, 16
+    r = jax.random.normal(ks[0], (b, s, h, n))
+    k = jax.random.normal(ks[1], (b, s, h, n))
+    v = jax.random.normal(ks[2], (b, s, h, n))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, n)))
+    u = jax.random.normal(ks[4], (h, n))
+    y1, st1 = ops.wkv6(r, k, v, w, u, block_t=128)
+    y2, st2 = ops.wkv6(r, k, v, w, u, block_t=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2), atol=1e-5)
+
+
+@pytest.mark.parametrize("b,s,w", [
+    (1, 32, 16),
+    (2, 128, 64),
+    (2, 256, 256),
+    (4, 64, 128),
+])
+@pytest.mark.parametrize("block_t,block_w", [(16, 16), (64, 64)])
+def test_rglru_matches_oracle(b, s, w, block_t, block_w):
+    ks = jax.random.split(jax.random.PRNGKey(s + w), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, w)))
+    x = jax.random.normal(ks[1], (b, s, w))
+    h0 = jax.random.normal(ks[2], (b, w))
+    h, hT = ops.rglru(a, x, h0, block_t=min(block_t, s),
+                      block_w=min(block_w, w))
+    h2, hT2 = ref.rglru_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h2),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT2),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_nonzero_initial_state():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    b, s, w = 2, 64, 32
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, w)))
+    x = jax.random.normal(ks[1], (b, s, w))
+    h0 = 5.0 * jax.random.normal(ks[2], (b, w))
+    h, hT = ops.rglru(a, x, h0, block_t=16, block_w=16)
+    h2, hT2 = ref.rglru_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT2), atol=1e-4)

@@ -1,0 +1,134 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions (assignment requirement f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_ORDER, get_smoke_config
+from repro.models import api
+from repro.models.common import init_params
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+        "mask": jnp.ones((B, S), dtype=jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = 0.1 * jax.random.normal(
+            ks[2], (B, cfg.n_patches, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = 0.1 * jax.random.normal(
+            ks[2], (B, S, cfg.d_model)).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_ORDER)
+def test_train_step_runs_and_is_finite(arch, rules_train, mesh11):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), api.param_table(cfg))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    with mesh11:
+        loss, metrics = jax.jit(
+            lambda p, b: api.train_loss(cfg, rules_train, p, b)
+        )(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert 0.0 < float(loss) < 20.0
+    assert np.isfinite(float(metrics["xent"]))
+
+
+@pytest.mark.parametrize("arch", ARCH_ORDER)
+def test_prefill_then_decode_shapes(arch, rules_decode, mesh11):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), api.param_table(cfg))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    del batch["labels"], batch["mask"]
+    with mesh11:
+        logits, caches = jax.jit(
+            lambda p, b: api.prefill(cfg, rules_decode, p, b))(params, batch)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert np.all(np.isfinite(np.asarray(logits, dtype=np.float32)))
+        # pad caches out to max_seq for decode
+        max_seq = S + 8
+        caches_full = api.init_caches(cfg, B, max_seq)
+        caches_full = jax.tree.map(_blit, caches_full, caches)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        step = {"tokens": tok, "index": jnp.int32(S)}
+        logits2, caches2 = jax.jit(
+            lambda p, c, b: api.decode_step(cfg, rules_decode, p, c, b)
+        )(params, caches_full, step)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits2, dtype=np.float32)))
+
+
+def _blit(big, small):
+    if big.shape == small.shape:
+        return small
+    pads = [(0, b - s) for b, s in zip(big.shape, small.shape)]
+    return jnp.pad(small, pads).astype(big.dtype)
+
+
+def test_decode_matches_full_forward_dense(rules_decode, mesh11):
+    """Golden consistency: prefill(s tokens) + decode(token s) logits
+    == prefill(s+1 tokens) last-position logits (dense llama family)."""
+    cfg = get_smoke_config("llama3.2-1b")
+    params = init_params(jax.random.PRNGKey(0), api.param_table(cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S + 1), 0,
+                              cfg.vocab_size)
+    with mesh11:
+        # full prefill over s+1 tokens
+        want, _ = api.prefill(cfg, rules_decode, params,
+                              {"tokens": toks})
+        # prefill s, decode 1
+        _, caches = api.prefill(cfg, rules_decode, params,
+                                {"tokens": toks[:, :S]})
+        caches_full = api.init_caches(cfg, B, S + 1)
+        caches_full = jax.tree.map(_blit, caches_full, caches)
+        got, _ = api.decode_step(cfg, rules_decode, params, caches_full,
+                                 {"tokens": toks[:, S:], "index":
+                                  jnp.int32(S)})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_decode_matches_full_forward_rwkv(rules_decode, mesh11):
+    """Same golden consistency for the recurrent family (state carry)."""
+    cfg = get_smoke_config("rwkv6-7b")
+    params = init_params(jax.random.PRNGKey(0), api.param_table(cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, S + 1), 0,
+                              cfg.vocab_size)
+    with mesh11:
+        want, _ = api.prefill(cfg, rules_decode, params,
+                              {"tokens": toks})
+        _, caches = api.prefill(cfg, rules_decode, params,
+                                {"tokens": toks[:, :S]})
+        got, _ = api.decode_step(cfg, rules_decode, params, caches,
+                                 {"tokens": toks[:, S:], "index":
+                                  jnp.int32(S)})
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_moe_aux_losses_present(rules_train, mesh11):
+    cfg = get_smoke_config("olmoe-1b-7b")
+    params = init_params(jax.random.PRNGKey(0), api.param_table(cfg))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    with mesh11:
+        loss, metrics = api.train_loss(cfg, rules_train, params, batch)
+    assert "moe_aux" in metrics and "moe_z" in metrics
+    assert float(metrics["moe_aux"]) >= 0.0
+    # total loss includes the aux terms
+    assert float(metrics["loss"]) >= float(metrics["xent"])
+
+
+def test_param_tables_cover_all_archs():
+    from repro.models.common import count_params
+    for arch in ARCH_ORDER:
+        cfg = get_smoke_config(arch)
+        n = count_params(api.param_table(cfg))
+        assert n > 0, arch

@@ -1,0 +1,126 @@
+"""End-to-end system tests: the twin in the loop with the emulator."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.emulator import ClusterEmulator, FailureSpec
+from repro.cluster.workload import JobSpec, paper_synthetic_trace
+from repro.core.events import EventBus
+from repro.core.policies import FCFS, PAPER_POOL, SJF, WFP
+from repro.core.twin import SchedTwin
+
+
+def tiny_trace(n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    jobs = []
+    t = 0.0
+    for j in range(n):
+        jobs.append(JobSpec(j, t, int(rng.integers(1, 12)),
+                            float(rng.uniform(30, 300)),
+                            float(rng.uniform(20, 280)), "t"))
+        t += 4.0
+    return jobs
+
+
+def run_twin(trace, total_nodes=16, **twin_kw):
+    bus = EventBus()
+    em = ClusterEmulator(trace, total_nodes, bus=bus,
+                         check_invariants=True)
+    twin = SchedTwin(bus=bus, qrun=em.qrun, total_nodes=total_nodes,
+                     max_jobs=em.max_jobs,
+                     free_nodes_probe=lambda: em.free_nodes, **twin_kw)
+    report = em.run(on_event=twin.pump)
+    return report, twin
+
+
+def run_static(trace, policy, total_nodes=16):
+    em = ClusterEmulator(trace, total_nodes, check_invariants=True)
+    return em.run(policy_id=policy)
+
+
+def test_twin_completes_all_jobs():
+    trace = tiny_trace()
+    report, twin = run_twin(trace)
+    assert report.n_jobs == len(trace)
+    assert report.utilization > 0
+    assert len(twin.telemetry.cycles) > 0
+
+
+def test_twin_not_worse_than_worst_static():
+    """The twin picks among the static policies, so its paper-score
+    must not be worse than the WORST static policy's."""
+    trace = paper_synthetic_trace(seed=1)
+    rep_twin, _ = run_twin(trace, total_nodes=32)
+    from repro.core.scoring import PAPER_WEIGHTS
+
+    def score(rep):
+        return (0.25 * rep.max_wait / 60 + 0.25 * rep.max_slowdown
+                + 0.25 * rep.avg_wait / 60 + 0.25 * rep.avg_slowdown)
+
+    worst = max(score(run_static(trace, p, 32)) for p in PAPER_POOL)
+    assert score(rep_twin) <= worst * 1.05  # small slack: replanning noise
+
+
+def test_policy_distribution_sums_to_100():
+    trace = tiny_trace(30, seed=2)
+    _, twin = run_twin(trace)
+    dist = twin.telemetry.policy_start_distribution()
+    assert abs(sum(dist.values()) - 100.0) < 1e-6
+    assert set(dist) <= {"WFP", "FCFS", "SJF"}
+
+
+def test_twin_recovery_replays_bus():
+    trace = tiny_trace(16, seed=3)
+    bus = EventBus()
+    em = ClusterEmulator(trace, 16, bus=bus)
+    twin = SchedTwin(bus=bus, qrun=em.qrun, total_nodes=16,
+                     max_jobs=em.max_jobs)
+    em.run(on_event=twin.pump)
+    state_before = twin.state
+    twin.recover()
+    # replay rebuilds the same job table
+    np.testing.assert_allclose(np.asarray(state_before.jobs.state),
+                               np.asarray(twin.state.jobs.state))
+    np.testing.assert_allclose(np.asarray(state_before.jobs.end_t),
+                               np.asarray(twin.state.jobs.end_t), atol=1e-4)
+
+
+def test_node_failure_requeues_and_finishes():
+    trace = tiny_trace(20, seed=4)
+    bus = EventBus()
+    em = ClusterEmulator(trace, 16, bus=bus,
+                         failures=[FailureSpec(time=30.0, nodes=8,
+                                               duration=120.0)],
+                         check_invariants=True)
+    twin = SchedTwin(bus=bus, qrun=em.qrun, total_nodes=16,
+                     max_jobs=em.max_jobs,
+                     free_nodes_probe=lambda: em.free_nodes)
+    report = em.run(on_event=twin.pump)
+    assert report.n_jobs == 20          # everything still completed
+    assert report.n_restarts >= 0       # victims were re-run
+
+
+def test_stale_qrun_is_ignored():
+    trace = tiny_trace(8, seed=5)
+    bus = EventBus()
+    em = ClusterEmulator(trace, 16, bus=bus)
+    twin = SchedTwin(bus=bus, qrun=em.qrun, total_nodes=16,
+                     max_jobs=em.max_jobs)
+    em.run(on_event=twin.pump)
+    # re-running an already-finished job must be a no-op
+    free_before = em.free_nodes
+    em.qrun([0], em.now)
+    assert em.free_nodes == free_before
+
+
+def test_extended_pool_also_drains():
+    from repro.core.policies import EXTENDED_POOL
+    trace = tiny_trace(20, seed=6)
+    report, twin = run_twin(trace, pool=EXTENDED_POOL)
+    assert report.n_jobs == 20
+
+
+def test_ensemble_twin_drains():
+    trace = tiny_trace(16, seed=7)
+    report, twin = run_twin(trace, ensemble=4, ensemble_noise=0.3)
+    assert report.n_jobs == 16

@@ -1,0 +1,88 @@
+"""Parallel what-if + policy selection tests (§3.3-§3.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scoring, whatif
+from repro.core.policies import FCFS, PAPER_POOL, SJF, WFP
+
+from conftest import make_cluster_state
+
+
+def test_decide_picks_min_cost_policy():
+    state = make_cluster_state(seed=7)
+    pool = jnp.asarray(PAPER_POOL, dtype=jnp.int32)
+    d = whatif.decide(state, pool)
+    costs = np.asarray(d.costs)
+    assert int(d.policy_index) == int(np.argmin(costs))
+
+
+def test_tie_break_follows_paper_priority():
+    costs = jnp.asarray([1.0, 1.0, 1.0])
+    assert int(scoring.select_policy(costs)) == 0  # WFP wins ties
+    costs = jnp.asarray([2.0, 1.0, 1.0])
+    assert int(scoring.select_policy(costs)) == 1  # then FCFS
+
+
+def test_run_mask_comes_from_winner():
+    state = make_cluster_state(seed=11)
+    pool = jnp.asarray(PAPER_POOL, dtype=jnp.int32)
+    d = whatif.decide(state, pool)
+    from repro.core.des import simulate_to_drain
+    winner = pool[int(d.policy_index)]
+    res = simulate_to_drain(state, winner)
+    assert np.array_equal(np.asarray(d.run_mask),
+                          np.asarray(res.first_started))
+
+
+def test_decide_jit_cache_reused_across_states():
+    state = make_cluster_state(seed=1)
+    pool = jnp.asarray(PAPER_POOL, dtype=jnp.int32)
+    d1 = whatif.decide(state, pool)
+    state2 = make_cluster_state(seed=2)
+    d2 = whatif.decide(state2, pool)  # same jit cache, new data
+    assert d1.costs.shape == d2.costs.shape == (3,)
+
+
+def test_ensemble_decision_shapes_and_member0():
+    state = make_cluster_state(seed=3)
+    pool = jnp.asarray(PAPER_POOL, dtype=jnp.int32)
+    key = jax.random.PRNGKey(0)
+    d = whatif.decide_ensemble(state, pool, key, n_ens=4, noise=0.2)
+    assert d.costs.shape == (3,)
+    assert d.run_mask.shape == (state.jobs.capacity,)
+
+
+def test_ensemble_zero_noise_matches_plain_decide():
+    state = make_cluster_state(seed=5)
+    pool = jnp.asarray(PAPER_POOL, dtype=jnp.int32)
+    key = jax.random.PRNGKey(0)
+    d_plain = whatif.decide(state, pool)
+    d_ens = whatif.decide_ensemble(state, pool, key, n_ens=2, noise=0.0)
+    assert int(d_plain.policy_index) == int(d_ens.policy_index)
+    np.testing.assert_allclose(np.asarray(d_plain.costs),
+                               np.asarray(d_ens.costs), rtol=1e-5)
+
+
+def test_paper_score_weights():
+    from repro.core.des import DrainMetrics
+    m = DrainMetrics(avg_wait=jnp.float32(120.0), max_wait=jnp.float32(600.0),
+                     avg_slowdown=jnp.float32(2.0),
+                     max_slowdown=jnp.float32(8.0),
+                     makespan=jnp.float32(0.0), utilization=jnp.float32(0.0))
+    c = scoring.policy_cost(m)
+    # 0.25*(600/60) + 0.25*8 + 0.25*(120/60) + 0.25*2 = 2.5+2+0.5+0.5
+    assert abs(float(c) - 5.5) < 1e-5
+
+
+def test_radar_normalization_and_area():
+    per = {
+        "A": {"avg_wait": 10, "max_wait": 100, "avg_slowdown": 1,
+              "max_slowdown": 2, "utilization": 0.9},
+        "B": {"avg_wait": 50, "max_wait": 500, "avg_slowdown": 5,
+              "max_slowdown": 10, "utilization": 0.5},
+    }
+    areas = scoring.radar_report(per)
+    # A best on every axis -> radius 1 everywhere -> pentagon area
+    assert abs(areas["A"] - 5 * 0.5 * np.sin(2 * np.pi / 5)) < 1e-9
+    assert areas["B"] == 0.0
