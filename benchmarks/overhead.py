@@ -3,74 +3,132 @@
 Measures (a) the twin's per-cycle decision latency during a live run
 (the paper's metric), (b) the steady-state latency of the jitted
 what-if engine alone (post-compilation — what a persistent daemon
-pays), and (c) the vectorized-kernel scheduling pass, across policy
-pool sizes — the scaling the TPU adaptation buys (DESIGN.md §2).
+pays), and (c) a backend shoot-out across policy pool sizes: the
+policy-batched ``DrainEngine`` (``reference`` and ``pallas`` backends)
+against the legacy ``jax.vmap``-over-scalar-DES path it replaced
+(DESIGN.md §3).  The shoot-out is emitted as a ``BENCH_overhead.json``
+artifact.
+
+CLI:
+    PYTHONPATH=src python benchmarks/overhead.py               # {3,7,32}
+    PYTHONPATH=src python benchmarks/overhead.py --pool 7      # one size
+    PYTHONPATH=src python benchmarks/overhead.py --out bench.json
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import List
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.cluster.workload import paper_synthetic_trace
 from repro.core import whatif
+from repro.core.engine import DrainEngine
 from repro.core.policies import EXTENDED_POOL, PAPER_POOL
 
-from benchmarks.figure3_radar import run_all
+POOL_SIZES = (3, 7, 32)
 
 
 def _bench(fn, n_iter: int = 20) -> float:
+    """Mean seconds/call over ``n_iter`` calls after a warm-up, best of
+    3 repeats (rejects scheduler noise on shared CPU runners)."""
     fn()  # warm-up / compile
-    t0 = time.perf_counter()
-    for _ in range(n_iter):
-        fn()
-    return (time.perf_counter() - t0) / n_iter
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / n_iter)
+    return best
 
 
-def main(seed: int = 0) -> List[str]:
+def make_pool(k: int) -> jax.Array:
+    """A k-policy pool: the 7 distinct policies cycled to length k
+    (positions past the first occurrence only matter for tie-breaks)."""
+    ids = [EXTENDED_POOL[i % len(EXTENDED_POOL)] for i in range(k)]
+    return jnp.asarray(ids, dtype=jnp.int32)
+
+
+def bench_engines(state, pool_sizes: Sequence[int] = POOL_SIZES,
+                  n_iter: int = 20) -> Dict[str, Dict[str, float]]:
+    """Per-pool-size cycle latency: legacy vmap vs batched engine."""
+    ref = DrainEngine("reference")
+    pal = DrainEngine("pallas")   # interpret auto: CPU here, compiled on TPU
+    out: Dict[str, Dict[str, float]] = {}
+    for k in pool_sizes:
+        pool = make_pool(k)
+        timers = {
+            "legacy_vmap_us": lambda: whatif.decide_legacy_vmap(state, pool),
+            "engine_reference_us": lambda: ref.decide(state, pool),
+            "engine_pallas_us": lambda: pal.decide(state, pool),
+        }
+        row: Dict[str, float] = {}
+        for name, thunk in timers.items():
+            row[name] = _bench(
+                lambda t=thunk: jax.block_until_ready(t().costs),
+                n_iter) * 1e6
+        row["speedup_ref_vs_legacy"] = (
+            row["legacy_vmap_us"] / max(row["engine_reference_us"], 1e-9))
+        out[str(k)] = row
+    return out
+
+
+def write_artifact(engines: Dict[str, Dict[str, float]], path: str,
+                   extra: Optional[Dict] = None) -> None:
+    doc = {
+        "benchmark": "overhead",
+        "backend": jax.default_backend(),
+        "pools": engines,
+    }
+    if extra:
+        doc.update(extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+
+def main(seed: int = 0, pool_sizes: Sequence[int] = POOL_SIZES,
+         out: str = "BENCH_overhead.json", live: bool = True) -> List[str]:
     lines = []
+    extra: Dict = {}
 
-    # (a) live per-cycle latency (includes first-call compilation)
-    _, twin = run_all(seed=seed)
-    stats = twin.telemetry.cycle_latency_stats()
-    lines.append(
-        f"overhead,live_cycle,mean_s={stats['mean_s']:.4f},"
-        f"p50_s={stats['p50_s']:.4f},max_s={stats['max_s']:.4f},"
-        f"n={stats['n']},paper=a few seconds")
+    if live:
+        # (a) live per-cycle latency (includes first-call compilation)
+        from benchmarks.figure3_radar import run_all
+        _, twin = run_all(seed=seed)
+        stats = twin.telemetry.cycle_latency_stats()
+        lines.append(
+            f"overhead,live_cycle,mean_s={stats['mean_s']:.4f},"
+            f"p50_s={stats['p50_s']:.4f},max_s={stats['max_s']:.4f},"
+            f"n={stats['n']},paper=a few seconds")
+        extra["live_cycle"] = {k: float(v) for k, v in stats.items()}
 
-    # (b) steady-state decision latency (jit-compiled, k=3 paper pool)
     state = snapshot_state(seed)
+
+    # (b) steady-state decision latency, k=3 paper pool, batched engine
     pool3 = jnp.asarray(PAPER_POOL, dtype=jnp.int32)
-
-    def cycle3():
-        d = whatif.decide(state, pool3)
-        jax.block_until_ready(d.costs)
-
-    t3 = _bench(cycle3)
+    eng = DrainEngine("reference")
+    t3 = _bench(lambda: jax.block_until_ready(eng.decide(state, pool3).costs))
     lines.append(f"overhead,steady_cycle_k3,us_per_call={t3 * 1e6:.0f}")
 
-    # (c) pool scaling: k=7 extended pool
-    pool7 = jnp.asarray(EXTENDED_POOL, dtype=jnp.int32)
+    # (c) backend shoot-out across pool sizes -> JSON artifact
+    engines = bench_engines(state, pool_sizes)
+    for k, row in engines.items():
+        lines.append(
+            f"overhead,engines_k{k},"
+            + ",".join(f"{n}={v:.0f}" for n, v in sorted(row.items())
+                       if n.endswith("_us"))
+            + f",speedup_ref_vs_legacy={row['speedup_ref_vs_legacy']:.2f}x")
+    write_artifact(engines, out, extra)
+    lines.append(f"overhead,artifact,path={out}")
 
-    def cycle7():
-        d = whatif.decide(state, pool7)
-        jax.block_until_ready(d.costs)
-
-    t7 = _bench(cycle7)
-    lines.append(
-        f"overhead,steady_cycle_k7,us_per_call={t7 * 1e6:.0f},"
-        f"scaling_vs_k3={t7 / max(t3, 1e-12):.2f}x")
-
-    # (d) the kernelized scheduling pass alone
+    # (d) the kernelized scheduling pass alone (shared-snapshot variant)
     from repro.kernels import ops
-
-    def kpass():
-        started, free = ops.twin_schedule_pass(state, pool7)
-        jax.block_until_ready(started)
-
-    tk = _bench(kpass)
+    pool7 = jnp.asarray(EXTENDED_POOL, dtype=jnp.int32)
+    tk = _bench(
+        lambda: jax.block_until_ready(ops.twin_schedule_pass(state, pool7)[0]))
     lines.append(f"overhead,kernel_pass_k7,us_per_call={tk * 1e6:.0f}")
     return lines
 
@@ -78,7 +136,6 @@ def main(seed: int = 0) -> List[str]:
 # -- helper: a mid-trace snapshot with a busy queue --------------------
 
 def snapshot_state(seed: int):
-    import jax.numpy as jnp
     from repro.core.state import add_job, empty_state, start_job
     trace = paper_synthetic_trace(seed=seed)
     st = empty_state(256, 32)
@@ -94,5 +151,23 @@ def snapshot_state(seed: int):
 
 
 if __name__ == "__main__":
-    for line in main():
+    # direct invocation (python benchmarks/overhead.py) puts benchmarks/
+    # on sys.path, not the repo root; --live imports benchmarks.*
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool", type=int, default=None,
+                    help="bench a single pool size (default: 3, 7, 32)")
+    ap.add_argument("--out", default="BENCH_overhead.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--live", action="store_true",
+                    help="also run the full live-cycle co-simulation")
+    args = ap.parse_args()
+    if args.pool is not None and args.pool < 1:
+        ap.error("--pool must be >= 1")
+    sizes = (args.pool,) if args.pool is not None else POOL_SIZES
+    for line in main(seed=args.seed, pool_sizes=sizes, out=args.out,
+                     live=args.live):
         print(line)

@@ -8,9 +8,10 @@ feedback (§3.5).
 
 Two scheduler modes:
   * static  — the emulator itself schedules with one fixed policy
-              (+ EASY backfill), using the *same* jitted
-              ``schedule_pass`` as the twin's simulator so baseline
-              semantics are bit-identical to the what-if model;
+              (+ EASY backfill) through a k=1 ``DrainEngine`` pass —
+              the *same* engine backend as the twin's simulator, so
+              baseline semantics are bit-identical to the what-if
+              model under any backend;
   * twin    — scheduling authority is delegated: the emulator only
               starts jobs the twin selects via ``qrun``.
 
@@ -24,12 +25,11 @@ import dataclasses
 import heapq
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backfill import schedule_pass
 from repro.core.des import SLOWDOWN_TAU
+from repro.core.engine import DrainEngine
 from repro.core.events import Event, EventBus, EventKind
 from repro.core.state import (DONE, INVALID, QUEUED, RUNNING, JobTable,
                               SimState)
@@ -82,9 +82,11 @@ class ClusterEmulator:
                  bus: Optional[EventBus] = None,
                  max_jobs: Optional[int] = None,
                  failures: Sequence[FailureSpec] = (),
-                 check_invariants: bool = False) -> None:
+                 check_invariants: bool = False,
+                 engine: Optional[DrainEngine] = None) -> None:
         self.trace = list(trace)
         self.bus = bus if bus is not None else EventBus()
+        self.engine = engine if engine is not None else DrainEngine()
         self.total_nodes = int(total_nodes)
         self.capacity_nodes = int(total_nodes)  # shrinks on failures
         self.free_nodes = int(total_nodes)
@@ -176,8 +178,8 @@ class ClusterEmulator:
         )
 
     def _static_schedule(self, policy_id: int) -> None:
-        res = _jit_schedule_pass(self._mirror_state(), jnp.int32(policy_id))
-        started = np.asarray(res.started)
+        started = np.asarray(self.engine.schedule_pass_starts(
+            self._mirror_state(), jnp.int32(policy_id)))
         for j in np.nonzero(started)[0]:
             self._start_job(int(j), self.now)
 
@@ -300,8 +302,3 @@ class ClusterEmulator:
             avg_slowdown=float(sd.mean()), max_slowdown=float(sd.max()),
             utilization=min(util, 1.0), n_events=self.n_events,
             n_restarts=self.n_restarts)
-
-
-@jax.jit
-def _jit_schedule_pass(state: SimState, policy_id):
-    return schedule_pass(state, policy_id)

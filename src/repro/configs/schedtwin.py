@@ -2,8 +2,9 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
+from repro.core.engine import DrainEngine
 from repro.core.policies import EXTENDED_POOL, PAPER_POOL
 from repro.core.scoring import PAPER_WEIGHTS, ScoreWeights
 
@@ -18,7 +19,17 @@ class TwinConfig:
     ensemble_noise: float = 0.3
     trace_seed: int = 0
     accuracy: Tuple[float, float] = (0.5, 1.0)     # true/estimated runtime
+    # What-if engine: scheduling-pass backend ("reference" = pure-JAX
+    # oracle, "pallas" = the TPU kernel) and Pallas interpret override
+    # (None auto-detects: interpret on CPU, compiled on TPU).
+    backend: str = "reference"
+    interpret: Optional[bool] = None
+
+    def make_engine(self) -> DrainEngine:
+        """The policy-batched drain engine this config selects."""
+        return DrainEngine(backend=self.backend, interpret=self.interpret)
 
 
 PAPER_TWIN = TwinConfig()
 EXTENDED_TWIN = TwinConfig(pool=tuple(EXTENDED_POOL))
+PALLAS_TWIN = TwinConfig(backend="pallas")

@@ -4,13 +4,18 @@ from repro.core.state import (DONE, INVALID, QUEUED, RUNNING, JobTable,
                               SimState, empty_jobs, empty_state)
 from repro.core.policies import (EXTENDED_POOL, FCFS, PAPER_POOL, SJF, WFP,
                                  policy_name, priority_key)
-from repro.core.backfill import PassResult, schedule_pass
-from repro.core.des import (DrainMetrics, DrainResult, drain_metrics,
-                            simulate_to_drain)
+from repro.core.backfill import (PassResult, priority_order, schedule_pass,
+                                 schedule_pass_with_order)
+from repro.core.des import (DrainMetrics, DrainResult, broadcast_state,
+                            drain_metrics, simulate_to_drain,
+                            simulate_to_drain_batched)
 from repro.core.scoring import (PAPER_WEIGHTS, ScoreWeights, policy_cost,
                                 radar_area, radar_normalize, radar_report,
                                 select_policy)
-from repro.core.whatif import Decision, decide, decide_ensemble, sharded_whatif
+from repro.core.engine import (DEFAULT_ENGINE, PASS_BACKENDS, DrainEngine,
+                               register_backend)
+from repro.core.whatif import (Decision, decide, decide_ensemble,
+                               decide_legacy_vmap, pool_array, sharded_whatif)
 from repro.core.twin import SchedTwin
 
 __all__ = [
@@ -19,10 +24,14 @@ __all__ = [
     "INVALID", "QUEUED", "RUNNING", "DONE",
     "WFP", "FCFS", "SJF", "PAPER_POOL", "EXTENDED_POOL",
     "policy_name", "priority_key",
-    "PassResult", "schedule_pass",
-    "DrainResult", "DrainMetrics", "simulate_to_drain", "drain_metrics",
+    "PassResult", "priority_order", "schedule_pass",
+    "schedule_pass_with_order",
+    "DrainResult", "DrainMetrics", "simulate_to_drain",
+    "simulate_to_drain_batched", "broadcast_state", "drain_metrics",
     "ScoreWeights", "PAPER_WEIGHTS", "policy_cost", "select_policy",
     "radar_area", "radar_normalize", "radar_report",
-    "Decision", "decide", "decide_ensemble", "sharded_whatif",
+    "DrainEngine", "DEFAULT_ENGINE", "PASS_BACKENDS", "register_backend",
+    "Decision", "decide", "decide_ensemble", "decide_legacy_vmap",
+    "pool_array", "sharded_whatif",
     "SchedTwin",
 ]

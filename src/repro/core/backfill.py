@@ -41,16 +41,34 @@ class PassResult(NamedTuple):
     shadow_time: jax.Array  # f32 scalar — reservation time (+inf if none)
 
 
+def priority_order(state: SimState, policy_id) -> jax.Array:
+    """Priority-ranked job slots for one policy: queued jobs first by
+    key, invalid/running/done last.  Stable argsort -> ties fall back to
+    slot (submission) order.  Batched callers (``core.engine``) compute
+    this once per event for the whole policy axis."""
+    queued = state.jobs.state == QUEUED
+    keys = policies.priority_key(state.jobs, state.now, policy_id)
+    keys = jnp.where(queued, keys, jnp.inf)
+    return jnp.argsort(keys)
+
+
 def schedule_pass(state: SimState, policy_id) -> PassResult:
+    """Keys + argsort + the order-driven pass (scalar convenience)."""
+    return schedule_pass_with_order(state, priority_order(state, policy_id))
+
+
+def schedule_pass_with_order(state: SimState, order: jax.Array) -> PassResult:
+    """The pass proper, given a precomputed priority ``order``.
+
+    This is the sequential part every backend must implement; the
+    ``reference`` engine backend is exactly this function vmapped over
+    the policy/ensemble batch axis.
+    """
     jobs = state.jobs
     now = state.now
     max_jobs = jobs.capacity
 
     queued = jobs.state == QUEUED
-    keys = policies.priority_key(jobs, now, policy_id)
-    keys = jnp.where(queued, keys, jnp.inf)
-    order = jnp.argsort(keys)  # stable: ties -> slot (submission) order
-
     nodes = jobs.nodes
     est = jobs.est_runtime
 

@@ -1,15 +1,29 @@
 """Discrete-event simulation engine (§3.3).
 
-``simulate_to_drain`` runs one what-if fork: starting from the twin's
-synchronized snapshot (running jobs with predicted ends + queued jobs),
-apply one policy until the queue drains.  Future arrivals are *not*
-simulated — per §3.2, submit events cannot be predicted; the event
-horizon contains only predicted job-end events.
+Two drain implementations share the same event semantics
+(DESIGN.md §3):
 
-Time advances event-to-event via ``lax.while_loop``; each iteration is
-(schedule pass) -> (advance to next predicted completion).  The loop
-bound is ``max_jobs + 1``: every iteration with a non-empty queue either
-starts jobs or retires at least one running job.
+* ``simulate_to_drain`` — the scalar oracle: one what-if fork advanced
+  event-to-event via ``lax.while_loop``.  Kept as the semantic
+  reference (tests assert the batched drain against it) and as the
+  legacy ``jax.vmap`` path the benchmarks compare against.
+
+* ``simulate_to_drain_batched`` — the hot path: ALL k forks carried as
+  a leading batch axis on ``SimState`` and advanced in lock-step by ONE
+  ``lax.while_loop`` with per-fork done/dead masks.  The scheduling
+  pass runs on the whole batch at once through a pluggable backend
+  (``repro.core.engine``): priority keys are computed and argsorted
+  once per event for the entire batch, and the sequential
+  greedy/backfill part executes either as a vmapped reference pass or
+  as the Pallas kernel with the fork axis on the grid.
+
+Starting from the twin's synchronized snapshot (running jobs with
+predicted ends + queued jobs), each fork applies one policy until the
+queue drains.  Future arrivals are *not* simulated — per §3.2, submit
+events cannot be predicted; the event horizon contains only predicted
+job-end events.  The loop bound is ``max_jobs + 1``: every iteration
+with a non-empty queue either starts jobs or retires at least one
+running job.
 
 The same engine also powers trace-replay mode (arrivals injected from a
 trace) used by the static-policy baselines in the benchmarks — see
@@ -17,7 +31,7 @@ trace) used by the static-policy baselines in the benchmarks — see
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +92,99 @@ def simulate_to_drain(state: SimState, policy_id) -> DrainResult:
             jnp.asarray(False))
     st, first, it, dead = jax.lax.while_loop(cond, body, init)
     return DrainResult(state=st, first_started=first, iters=it, deadlocked=dead)
+
+
+# ----------------------------------------------------------------------
+# Batched drain — the engine's hot path.
+# ----------------------------------------------------------------------
+
+# A batched pass: (batched SimState, order (k, J) i32) -> started (k, J)
+# bool.  Implementations live in repro/core/engine.py (the backend
+# registry); des.py only defines the drain loop around them.
+BatchedPassFn = Callable[[SimState, jax.Array], jax.Array]
+
+
+def broadcast_state(state: SimState, k: int) -> SimState:
+    """Fan one snapshot out to k forks (a broadcast, not k copies —
+    XLA materializes lazily; the paper's "share a common database")."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (k,) + jnp.shape(x)), state)
+
+
+def simulate_to_drain_batched(states: SimState, order_fn: Callable[[SimState], jax.Array],
+                              pass_fn: BatchedPassFn) -> DrainResult:
+    """Drain all k forks of ``states`` (leading batch axis on every
+    leaf) in lock-step with per-fork done/dead masks.
+
+    ``order_fn`` maps the batched state to the (k, J) priority order —
+    ONE batched key computation + argsort per event for the whole fork
+    axis.  ``pass_fn`` runs the sequential greedy/backfill pass on the
+    batch (reference vmap or the Pallas grid).
+
+    Per-fork semantics are identical to ``simulate_to_drain``: a fork
+    that drains (or deadlocks) freezes while the rest keep stepping, so
+    the batched result is bit-for-bit the stack of k scalar drains
+    (asserted by tests/test_engine.py).
+    """
+    k = states.now.shape[0]
+    max_jobs = states.jobs.capacity
+    max_iters = max_jobs + 1
+
+    def active_mask(st, dead):
+        return (~dead) & jnp.any(st.jobs.state == QUEUED, axis=1)
+
+    def cond(carry):
+        st, first, it, dead, iters = carry
+        return (it < max_iters) & jnp.any(active_mask(st, dead))
+
+    def body(carry):
+        st, first, it, dead, iters = carry
+        active = active_mask(st, dead)                      # (k,)
+
+        # ---- schedule pass on the whole batch ------------------------
+        order = order_fn(st)                                # (k, J)
+        started = pass_fn(st, order) & active[:, None]      # (k, J)
+        jobs = st.jobs
+        now_col = st.now[:, None]
+        jobs = jobs._replace(
+            start_t=jnp.where(started, now_col, jobs.start_t),
+            end_t=jnp.where(started, now_col + jobs.est_runtime, jobs.end_t),
+            state=jnp.where(started, RUNNING, jobs.state),
+        )
+        st = st._replace(
+            jobs=jobs,
+            free_nodes=st.free_nodes
+            - jnp.sum(jnp.where(started, jobs.nodes, 0), axis=1),
+        )
+        first = jnp.where(it == 0, started, first)
+
+        # ---- advance each fork to its next predicted completion ------
+        jobs = st.jobs
+        running = jobs.state == RUNNING
+        has_queued = jnp.any(jobs.state == QUEUED, axis=1)  # (k,)
+        ends = jnp.where(running, jobs.end_t, jnp.inf)
+        t_next = jnp.maximum(jnp.min(ends, axis=1), st.now)  # (k,)
+        can_advance = active & has_queued & jnp.isfinite(t_next)
+        dead = dead | (active & has_queued & ~jnp.isfinite(t_next))
+
+        ending = running & (jobs.end_t <= t_next[:, None]) & can_advance[:, None]
+        freed = jnp.sum(jnp.where(ending, jobs.nodes, 0), axis=1)
+        jobs = jobs._replace(state=jnp.where(ending, DONE, jobs.state))
+        st = st._replace(
+            jobs=jobs,
+            free_nodes=st.free_nodes + freed,
+            now=jnp.where(can_advance, t_next, st.now),
+        )
+        return st, first, it + 1, dead, iters + active.astype(jnp.int32)
+
+    init = (states,
+            jnp.zeros((k, max_jobs), dtype=bool),
+            jnp.int32(0),
+            jnp.zeros((k,), dtype=bool),
+            jnp.zeros((k,), dtype=jnp.int32))
+    st, first, _, dead, iters = jax.lax.while_loop(cond, body, init)
+    return DrainResult(state=st, first_started=first, iters=iters,
+                       deadlocked=dead)
 
 
 class DrainMetrics(NamedTuple):

@@ -1,0 +1,272 @@
+"""Policy-batched drain engine with pluggable scheduling-pass backends.
+
+This is the hot spot of the whole system (DESIGN.md §1): every decision
+cycle forks the synchronized snapshot into k what-if simulations — one
+per candidate policy (times ``n_ens`` ensemble members) — and drains
+each to completion.  Instead of ``jax.vmap`` over a scalar DES, the
+``DrainEngine`` carries all forks as an explicit leading batch axis on
+``SimState`` and advances them in lock-step with ONE ``lax.while_loop``
+(``repro.core.des.simulate_to_drain_batched``).  Per event:
+
+  1. priority keys are computed and argsorted once for the WHOLE batch
+     (one (k, J) argsort, not k separate sorts inside each fork);
+  2. the inherently sequential greedy + EASY-backfill pass runs through
+     a registered *backend* on the batch axis;
+  3. starts are applied and every fork advances to its own next
+     predicted completion, with per-fork done/dead masks.
+
+Backends (registered in ``PASS_BACKENDS``):
+
+  * ``reference`` — today's pure-JAX ``schedule_pass`` logic
+    (``backfill.schedule_pass_with_order``) vmapped over the fork axis.
+    The semantic oracle: bit-identical to the scalar DES.
+  * ``pallas``    — ``kernels.policy_eval.policy_eval_pass_batched``,
+    the TPU kernel with the fork axis on the grid and the queue in
+    VMEM.  Interpret-mode on CPU (this container), compiled on TPU
+    (``interpret=None`` auto-detects).
+
+Every consumer routes through here: ``whatif.decide`` /
+``decide_ensemble`` (ensemble members ride the same batch axis —
+k * n_ens forks in one drain), ``whatif.sharded_whatif`` (shards the
+fork axis), ``SchedTwin`` (engine injected at construction) and the
+cluster emulator's static mode (a k=1 engine, so baselines stay
+bit-identical to the twin's simulator).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scoring
+from repro.core.backfill import priority_order, schedule_pass_with_order
+from repro.core.des import (DrainMetrics, DrainResult, broadcast_state,
+                            drain_metrics, simulate_to_drain_batched)
+from repro.core.state import QUEUED, RUNNING, SimState
+from repro.kernels import policy_eval as _pe
+
+
+class Decision(NamedTuple):
+    """One scheduling cycle's outcome (re-exported by ``whatif``)."""
+    policy_index: jax.Array   # index into the pool (NOT the policy id)
+    costs: jax.Array          # (k,) per-policy cost
+    run_mask: jax.Array       # bool (max_jobs,) jobs to start now (qrun set)
+    metrics: DrainMetrics     # (k,)-leading metrics for telemetry
+    deadlocked: jax.Array     # (k,) bool
+
+
+# ----------------------------------------------------------------------
+# Pass backends: (batched SimState, order (k, J)) -> started (k, J) bool
+# ----------------------------------------------------------------------
+
+PassFn = Callable[[SimState, jax.Array], jax.Array]
+PASS_BACKENDS: Dict[str, Callable[["DrainEngine"], PassFn]] = {}
+
+
+def register_backend(name: str):
+    """Register a pass-backend factory under ``name`` (the value of the
+    ``backend`` knob on ``configs.schedtwin.TwinConfig``)."""
+    def deco(factory: Callable[["DrainEngine"], PassFn]):
+        PASS_BACKENDS[name] = factory
+        return factory
+    return deco
+
+
+@register_backend("reference")
+def _reference_backend(engine: "DrainEngine") -> PassFn:
+    """The pure-JAX oracle pass, vmapped over the fork axis."""
+    def pass_fn(states: SimState, order: jax.Array) -> jax.Array:
+        res = jax.vmap(schedule_pass_with_order)(states, order)
+        return res.started
+    return pass_fn
+
+
+@register_backend("pallas")
+def _pallas_backend(engine: "DrainEngine") -> PassFn:
+    interpret = engine.resolved_interpret()
+
+    def pass_fn(states: SimState, order: jax.Array) -> jax.Array:
+        jobs = states.jobs
+        running = jobs.state == RUNNING
+        started, _ = _pe.policy_eval_pass_batched(
+            order,
+            jobs.state == QUEUED,
+            jobs.nodes,
+            jobs.est_runtime,
+            jnp.where(running, jobs.end_t, jnp.inf),
+            jnp.where(running, jobs.nodes, 0),
+            states.free_nodes,
+            states.now,
+            interpret=interpret)
+        return started > 0
+    return pass_fn
+
+
+def batched_priority_order(states: SimState, pool: jax.Array) -> jax.Array:
+    """(k, J) priority order for the whole fork batch: one batched key
+    evaluation + ONE argsort per event (stable; ties -> slot order).
+    Single-sourced from ``backfill.priority_order`` so the engine can
+    never drift from the scalar oracle's tie-break semantics."""
+    return jax.vmap(priority_order)(states, pool)
+
+
+# ----------------------------------------------------------------------
+# The engine.
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DrainEngine:
+    """Pluggable, policy-batched what-if engine.
+
+    Frozen + hashable so an engine instance is a static jit argument:
+    each (backend, interpret) pair compiles once and is cached.
+
+    Parameters
+    ----------
+    backend : name in ``PASS_BACKENDS`` ("reference" | "pallas").
+    interpret : Pallas interpret-mode override.  ``None`` auto-detects:
+        interpret on CPU (this container), compiled on TPU.
+    """
+
+    backend: str = "reference"
+    interpret: Optional[bool] = None
+
+    def __post_init__(self) -> None:
+        if self.backend not in PASS_BACKENDS:
+            raise ValueError(
+                f"unknown pass backend {self.backend!r}; "
+                f"registered: {sorted(PASS_BACKENDS)}")
+
+    def resolved_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def pass_fn(self) -> PassFn:
+        return PASS_BACKENDS[self.backend](self)
+
+    # -- drains --------------------------------------------------------
+    def drain_batched(self, states: SimState, pool: jax.Array) -> DrainResult:
+        """Drain pre-batched fork states (leading axis == pool)."""
+        return _drain(self, states, pool)
+
+    def drain(self, state: SimState, pool: jax.Array) -> DrainResult:
+        """Fork one snapshot across the pool and drain all forks."""
+        return _drain(self, broadcast_state(state, pool.shape[0]), pool)
+
+    # -- decision cycles ----------------------------------------------
+    def decide(self, state: SimState, pool: jax.Array,
+               weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS
+               ) -> Decision:
+        return _decide(self, state, pool, weights)
+
+    def decide_ensemble(self, state: SimState, pool: jax.Array,
+                        key: jax.Array, n_ens: int = 8, noise: float = 0.3,
+                        weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
+                        ) -> Decision:
+        return _decide_ensemble(self, state, pool, key, n_ens, noise, weights)
+
+    # -- single pass (k=1) — the emulator's static baseline mode -------
+    def schedule_pass_starts(self, state: SimState, policy_id) -> jax.Array:
+        """Started mask (J,) for ONE policy on an unbatched state."""
+        return _single_pass(self, state, jnp.asarray(policy_id, jnp.int32))
+
+
+# ----------------------------------------------------------------------
+# Jitted implementations (engine static -> cached per configuration).
+# ----------------------------------------------------------------------
+
+def _drain_impl(engine: DrainEngine, states: SimState,
+                pool: jax.Array) -> DrainResult:
+    return simulate_to_drain_batched(
+        states,
+        lambda st: batched_priority_order(st, pool),
+        engine.pass_fn())
+
+
+@functools.partial(jax.jit, static_argnames=("engine",))
+def _drain(engine: DrainEngine, states: SimState,
+           pool: jax.Array) -> DrainResult:
+    return _drain_impl(engine, states, pool)
+
+
+def _decide_impl(engine: DrainEngine, state: SimState, pool: jax.Array,
+                 weights: scoring.ScoreWeights) -> Decision:
+    k = pool.shape[0]
+    eval_mask = state.jobs.state == QUEUED
+    res = _drain_impl(engine, broadcast_state(state, k), pool)
+    metrics = jax.vmap(drain_metrics, in_axes=(0, None))(res, eval_mask)
+    costs = scoring.policy_cost(metrics, weights)
+    costs = jnp.where(res.deadlocked, jnp.inf, costs)
+    best = scoring.select_policy(costs)
+    return Decision(
+        policy_index=best,
+        costs=costs,
+        run_mask=res.first_started[best],
+        metrics=metrics,
+        deadlocked=res.deadlocked,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("engine", "weights"))
+def _decide(engine: DrainEngine, state: SimState, pool: jax.Array,
+            weights: scoring.ScoreWeights) -> Decision:
+    return _decide_impl(engine, state, pool, weights)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("engine", "n_ens", "noise", "weights"))
+def _decide_ensemble(engine: DrainEngine, state: SimState, pool: jax.Array,
+                     key: jax.Array, n_ens: int, noise: float,
+                     weights: scoring.ScoreWeights) -> Decision:
+    """k * n_ens forks ride ONE batch axis through ONE drain.
+
+    Fork f = e * k + p simulates policy ``pool[p]`` under ensemble
+    member e's lognormal walltime-estimate perturbation (member 0 is
+    exact, so actions stay consistent with the mirror).  The policy
+    cost is the ensemble mean; the qrun set comes from member 0 of the
+    winning policy.
+    """
+    k = pool.shape[0]
+    cap = state.jobs.capacity
+
+    eps = jax.random.normal(key, (n_ens, cap))
+    eps = eps.at[0].set(0.0)
+    scale = jnp.exp(noise * eps - 0.5 * noise * noise)       # (n_ens, J)
+    est_b = jnp.repeat(scale, k, axis=0) * state.jobs.est_runtime[None, :]
+
+    states = broadcast_state(state, n_ens * k)
+    states = states._replace(jobs=states.jobs._replace(est_runtime=est_b))
+    pool_b = jnp.tile(pool, n_ens)
+
+    eval_mask = state.jobs.state == QUEUED
+    res = _drain_impl(engine, states, pool_b)
+    metrics = jax.vmap(drain_metrics, in_axes=(0, None))(res, eval_mask)
+    mean_metrics = jax.tree.map(
+        lambda x: jnp.mean(x.reshape(n_ens, k), axis=0), metrics)
+    dead = jnp.any(res.deadlocked.reshape(n_ens, k), axis=0)
+    costs = scoring.policy_cost(mean_metrics, weights)
+    costs = jnp.where(dead, jnp.inf, costs)
+    best = scoring.select_policy(costs)
+    return Decision(
+        policy_index=best,
+        costs=costs,
+        run_mask=res.first_started.reshape(n_ens, k, cap)[0, best],
+        metrics=mean_metrics,
+        deadlocked=dead,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("engine",))
+def _single_pass(engine: DrainEngine, state: SimState,
+                 policy_id: jax.Array) -> jax.Array:
+    states = broadcast_state(state, 1)
+    pool = policy_id.reshape(1)
+    order = batched_priority_order(states, pool)
+    return engine.pass_fn()(states, order)[0]
+
+
+DEFAULT_ENGINE = DrainEngine(backend="reference")

@@ -7,7 +7,7 @@ The paper's objective:
 over the jobs waiting in the queue at decision time.  All four terms are
 costs (smaller is better); we therefore *minimize* Score — the paper's
 "highest score is selected" phrasing is read as intent (best policy),
-see DESIGN.md §2.  Wait times are scored in minutes so the WT and SD
+see DESIGN.md §4.  Wait times are scored in minutes so the WT and SD
 terms live on comparable scales within one trace.
 
 Ties: identical costs are broken by policy-id order, which is the

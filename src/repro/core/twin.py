@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sync, telemetry, whatif
+from repro.core import sync, telemetry
+from repro.core.engine import DrainEngine
 from repro.core.events import Event, EventBus, EventKind
 from repro.core.policies import PAPER_POOL, policy_name
 from repro.core.scoring import PAPER_WEIGHTS, ScoreWeights
@@ -45,6 +46,9 @@ class SchedTwin:
     pool : sequence of policy ids, tie-break order (default: paper's
         WFP, FCFS, SJF).
     ensemble : if > 1, use uncertainty-ensemble decisions (beyond paper).
+    engine : the policy-batched what-if engine (``core.engine``); pick
+        the scheduling-pass backend here (``DrainEngine("pallas")`` for
+        the TPU kernel).  Default: the pure-JAX reference backend.
     """
 
     CONSUMER = "schedtwin"
@@ -59,6 +63,7 @@ class SchedTwin:
                  free_nodes_probe: Optional[Callable[[], int]] = None,
                  ensemble: int = 1,
                  ensemble_noise: float = 0.3,
+                 engine: Optional[DrainEngine] = None,
                  seed: int = 0) -> None:
         self.bus = bus
         self.qrun = qrun
@@ -70,6 +75,7 @@ class SchedTwin:
         self.free_nodes_probe = free_nodes_probe
         self.ensemble = ensemble
         self.ensemble_noise = ensemble_noise
+        self.engine = engine if engine is not None else DrainEngine()
         self._key = jax.random.PRNGKey(seed)
 
     # ------------------------------------------------------------------
@@ -104,13 +110,13 @@ class SchedTwin:
         with telemetry.StopWatch() as sw:
             if self.ensemble > 1:
                 self._key, sub = jax.random.split(self._key)
-                decision = whatif.decide_ensemble(
+                decision = self.engine.decide_ensemble(
                     self.state, self.pool, sub,
                     n_ens=self.ensemble, noise=self.ensemble_noise,
                     weights=self.weights)
             else:
-                decision = whatif.decide(self.state, self.pool,
-                                         weights=self.weights)
+                decision = self.engine.decide(self.state, self.pool,
+                                              weights=self.weights)
             run_mask = np.asarray(decision.run_mask)  # blocks for timing
 
         job_ids = [int(j) for j in np.nonzero(run_mask)[0]]

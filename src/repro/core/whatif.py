@@ -2,41 +2,76 @@
 
 The paper forks k simulator processes (one per policy) sharing a common
 database.  On TPU the natural equivalent is a *policy batch axis*: one
-vectorized DES advanced in lock-step for all policies via ``jax.vmap``.
-The snapshot is shared (closed over, never copied per policy) — the
-same "objects share a common database, only carry event metadata"
-property, but in SPMD form.
+batched DES advanced in lock-step for all policies by the
+``repro.core.engine.DrainEngine`` (DESIGN.md §3).  The snapshot is
+shared (broadcast, never copied per policy) — the same "objects share a
+common database, only carry event metadata" property, but in SPMD form.
 
-Beyond the paper:
-  * ensemble mode — each policy is simulated under ``n_ens`` sampled
-    walltime-estimate perturbations (users overestimate; §3.2), and the
-    policy cost is the ensemble mean: decisions become robust to
-    estimate noise at zero extra latency (the ensemble rides the same
-    batch axis);
-  * ``sharded_whatif`` — shard_map over a device mesh for pools of
-    hundreds of policies (fleet-scale twins).
+This module is the thin public API over the engine:
+
+  * ``decide`` / ``decide_ensemble`` — one scheduling cycle on the
+    default (or a caller-supplied) engine; ensemble members ride the
+    same batch axis, so k * n_ens forks drain in ONE while_loop;
+  * ``sharded_whatif`` — the fork axis of the batched engine sharded
+    over a device mesh for pools of hundreds of policies (fleet-scale
+    twins);
+  * ``decide_legacy_vmap`` — the pre-engine path (``jax.vmap`` over the
+    scalar DES), kept as a regression oracle and as the baseline the
+    overhead benchmark compares the batched engine against.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import scoring
-from repro.core.des import DrainMetrics, drain_metrics, simulate_to_drain
+from repro.core.des import drain_metrics, simulate_to_drain
+from repro.core.engine import DEFAULT_ENGINE, Decision, DrainEngine
 from repro.core.state import QUEUED, SimState
 
+__all__ = [
+    "Decision", "decide", "decide_ensemble", "decide_legacy_vmap",
+    "sharded_whatif", "paper_pool", "pool_array",
+]
 
-class Decision(NamedTuple):
-    policy_index: jax.Array   # index into the pool (NOT the policy id)
-    costs: jax.Array          # (k,) per-policy cost
-    run_mask: jax.Array       # bool (max_jobs,) jobs to start now (qrun set)
-    metrics: DrainMetrics     # (k,)-leading metrics for telemetry
-    deadlocked: jax.Array     # (k,) bool
 
+def decide(state: SimState, pool: jax.Array,
+           weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
+           engine: Optional[DrainEngine] = None) -> Decision:
+    """One scheduling cycle: fork k sims, score, select, extract qrun set.
+
+    ``pool`` is an i32 vector of policy ids ordered by tie-break
+    priority.  Everything (all k drain simulations included) is a single
+    XLA computation — the per-cycle overhead the paper reports as "a
+    few seconds" is microseconds here (see benchmarks/overhead.py).
+    """
+    return (engine or DEFAULT_ENGINE).decide(state, pool, weights=weights)
+
+
+def decide_ensemble(state: SimState, pool: jax.Array, key: jax.Array,
+                    n_ens: int = 8, noise: float = 0.3,
+                    weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
+                    engine: Optional[DrainEngine] = None) -> Decision:
+    """Uncertainty-aware cycle (beyond paper).
+
+    Each ensemble member rescales every job's estimate by a lognormal
+    factor (sigma=``noise``) before simulating; the policy cost is the
+    ensemble mean.  The qrun set is taken from the unperturbed member
+    so actions stay consistent with the mirror.  All k * n_ens forks
+    ride one batch axis through one drain.
+    """
+    return (engine or DEFAULT_ENGINE).decide_ensemble(
+        state, pool, key, n_ens=n_ens, noise=noise, weights=weights)
+
+
+# ----------------------------------------------------------------------
+# Legacy path: vmap over the scalar DES (pre-engine).  Benchmark /
+# regression oracle only — new code should use the engine.
+# ----------------------------------------------------------------------
 
 def _single_whatif(state: SimState, policy_id) -> tuple:
     eval_mask = state.jobs.state == QUEUED
@@ -46,15 +81,9 @@ def _single_whatif(state: SimState, policy_id) -> tuple:
 
 
 @functools.partial(jax.jit, static_argnames=("weights",))
-def decide(state: SimState, pool: jax.Array,
-           weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS) -> Decision:
-    """One scheduling cycle: fork k sims, score, select, extract qrun set.
-
-    ``pool`` is an i32 vector of policy ids ordered by tie-break
-    priority.  Everything (k drain simulations included) is a single
-    XLA computation — the per-cycle overhead the paper reports as "a
-    few seconds" is microseconds here (see benchmarks/overhead.py).
-    """
+def decide_legacy_vmap(state: SimState, pool: jax.Array,
+                       weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS
+                       ) -> Decision:
     metrics, first_started, dead = jax.vmap(
         _single_whatif, in_axes=(None, 0))(state, pool)
     costs = scoring.policy_cost(metrics, weights)
@@ -69,56 +98,22 @@ def decide(state: SimState, pool: jax.Array,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("weights", "n_ens", "noise"))
-def decide_ensemble(state: SimState, pool: jax.Array, key: jax.Array,
-                    n_ens: int = 8, noise: float = 0.3,
-                    weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
-                    ) -> Decision:
-    """Uncertainty-aware cycle (beyond paper).
+# ----------------------------------------------------------------------
+# Fleet scale: shard the fork axis of the batched engine.
+# ----------------------------------------------------------------------
 
-    Each ensemble member rescales every job's *remaining* estimate by a
-    lognormal factor (sigma=``noise``) before simulating; the policy
-    cost is the ensemble mean.  The qrun set is taken from the
-    unperturbed member so actions stay consistent with the mirror.
+def sharded_whatif(mesh: Mesh, axis: str = "data",
+                   engine: Optional[DrainEngine] = None):
+    """Fleet-scale what-if: the fork (policy/ensemble) axis of the
+    batched engine sharded over ``axis`` of ``mesh``.  Returns a jitted
+    function with the same signature as ``decide`` whose pool must be
+    divisible by the axis size.  The snapshot is replicated (it is a
+    few KB); only the fork axis is split, mirroring "k simulator copies
+    sharing one database" at pod scale.
     """
-    k = pool.shape[0]
+    from repro.core.engine import _decide_impl  # the unjitted body
 
-    def member(state_m, policy_id):
-        return _single_whatif(state_m, policy_id)
-
-    def perturbed_state(eps):
-        jobs = state.jobs
-        est = jobs.est_runtime * jnp.exp(noise * eps - 0.5 * noise * noise)
-        return state._replace(jobs=jobs._replace(est_runtime=est))
-
-    eps = jax.random.normal(key, (n_ens, state.jobs.capacity))
-    eps = eps.at[0].set(0.0)  # member 0 = exact estimates
-    states = jax.vmap(perturbed_state)(eps)
-
-    metrics, first_started, dead = jax.vmap(
-        jax.vmap(member, in_axes=(None, 0)), in_axes=(0, None))(states, pool)
-    # metrics: (n_ens, k); reduce over ensemble
-    mean_metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), metrics)
-    costs = scoring.policy_cost(mean_metrics, weights)
-    costs = jnp.where(jnp.any(dead, axis=0), jnp.inf, costs)
-    best = scoring.select_policy(costs)
-    return Decision(
-        policy_index=best,
-        costs=costs,
-        run_mask=first_started[0, best],
-        metrics=mean_metrics,
-        deadlocked=jnp.any(dead, axis=0),
-    )
-
-
-def sharded_whatif(mesh: Mesh, axis: str = "data"):
-    """Fleet-scale what-if: the policy/ensemble axis sharded over
-    ``axis`` of ``mesh``.  Returns a jitted function with the same
-    signature as ``decide`` whose pool must be divisible by the axis
-    size.  The snapshot is replicated (it is a few KB); only the policy
-    axis is split, mirroring "k simulator copies sharing one database"
-    at pod scale.
-    """
+    eng = engine or DEFAULT_ENGINE
     pool_sharding = NamedSharding(mesh, P(axis))
     replicated = NamedSharding(mesh, P())
 
@@ -126,12 +121,7 @@ def sharded_whatif(mesh: Mesh, axis: str = "data"):
                        in_shardings=(replicated, pool_sharding),
                        out_shardings=replicated)
     def decide_sharded(state: SimState, pool: jax.Array) -> Decision:
-        metrics, first_started, dead = jax.vmap(
-            _single_whatif, in_axes=(None, 0))(state, pool)
-        costs = scoring.policy_cost(metrics)
-        costs = jnp.where(dead, jnp.inf, costs)
-        best = scoring.select_policy(costs)
-        return Decision(best, costs, first_started[best], metrics, dead)
+        return _decide_impl(eng, state, pool, scoring.PAPER_WEIGHTS)
 
     return decide_sharded
 
@@ -142,4 +132,8 @@ def paper_pool() -> jax.Array:
 
 
 def pool_array(ids: Sequence[int]) -> jax.Array:
-    return jnp.asarray(sorted(ids), dtype=jnp.int32)
+    """Pool vector in the CALLER's order.  Position is tie-break
+    priority (``select_policy`` is an argmin with first-occurrence
+    wins), so the order must be preserved — an earlier version sorted
+    ids here, silently discarding custom tie-break orders."""
+    return jnp.asarray(list(ids), dtype=jnp.int32)

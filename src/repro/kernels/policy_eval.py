@@ -15,7 +15,16 @@ CPU cores; the TPU-native adaptation is a **policy-batched kernel**:
     ``free_at(t_j) = free + sum(nodes_r * (end_r <= t_j))`` — an O(J^2)
     SIMD broadcast that replaces an O(J log J) sort-scan, which is the
     right trade on the VPU (J^2 = 64K lanes of work, zero data
-    movement).  See DESIGN.md §2 (hardware adaptation).
+    movement).  See ``DESIGN.md`` §2 (hardware adaptation) at the repo
+    root for the full derivation and the tie-handling caveat.
+
+Two entry points:
+  * ``policy_eval_pass`` — shared snapshot, per-policy ``order`` only
+    (the first pass of a decision cycle, where all forks still share
+    one queue state);
+  * ``policy_eval_pass_batched`` — every input carries the fork axis
+    (mid-drain, after fork states have diverged).  This is the
+    ``pallas`` backend of ``repro.core.engine.DrainEngine``.
 
 The priority *keys* are computed (and argsorted) outside the kernel —
 they are embarrassingly parallel and XLA already fuses them; the kernel
@@ -161,4 +170,45 @@ def policy_eval_pass(order: jax.Array, queued: jax.Array,
       run_nodes.reshape(1, j_cap).astype(f32),
       free0.reshape(1, 1).astype(f32),
       now.reshape(1, 1).astype(f32))
+    return started, free[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def policy_eval_pass_batched(order: jax.Array, queued: jax.Array,
+                             nodes: jax.Array, est: jax.Array,
+                             run_end: jax.Array, run_nodes: jax.Array,
+                             free0: jax.Array, now: jax.Array,
+                             *, interpret: bool = True):
+    """Fully policy-batched scheduling pass: ALL inputs are (k, J)
+    (``free0``/``now`` are (k,)) — one grid program per fork, each
+    reading its own row.  Used inside the batched drain, where fork
+    states have diverged (different jobs running, different clocks,
+    ensemble-perturbed estimates).
+
+    Returns (started (k, J) i32, free (k,) f32).
+    """
+    k, j_cap = order.shape
+    f32 = jnp.float32
+
+    per_policy = lambda: pl.BlockSpec((1, j_cap), lambda p: (p, 0))  # noqa: E731
+    per_scalar = lambda: pl.BlockSpec((1, 1), lambda p: (p, 0))  # noqa: E731
+
+    started, free = pl.pallas_call(
+        _pass_kernel,
+        grid=(k,),
+        in_specs=[per_policy()] * 6 + [per_scalar(), per_scalar()],
+        out_specs=[per_policy(), per_scalar()],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, j_cap), jnp.int32),
+            jax.ShapeDtypeStruct((k, 1), f32),
+        ],
+        interpret=interpret,
+    )(order.astype(jnp.int32),
+      queued.astype(jnp.int32),
+      nodes.astype(f32),
+      est.astype(f32),
+      run_end.astype(f32),
+      run_nodes.astype(f32),
+      free0.reshape(k, 1).astype(f32),
+      now.reshape(k, 1).astype(f32))
     return started, free[:, 0]

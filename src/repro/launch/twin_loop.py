@@ -3,6 +3,7 @@
     python -m repro.launch.twin_loop                  # paper §4.1 setup
     python -m repro.launch.twin_loop --pool extended --ensemble 8
     python -m repro.launch.twin_loop --failures 2     # fault injection
+    python -m repro.launch.twin_loop --backend pallas # kernel what-ifs
 """
 from __future__ import annotations
 
@@ -12,6 +13,7 @@ import numpy as np
 
 from repro.cluster.emulator import ClusterEmulator, FailureSpec
 from repro.cluster.workload import paper_synthetic_trace, poisson_trace
+from repro.core.engine import PASS_BACKENDS, DrainEngine
 from repro.core.events import EventBus
 from repro.core.policies import EXTENDED_POOL, PAPER_POOL
 from repro.core.twin import SchedTwin
@@ -25,8 +27,12 @@ def main() -> None:
     ap.add_argument("--pool", choices=("paper", "extended"), default="paper")
     ap.add_argument("--ensemble", type=int, default=1)
     ap.add_argument("--failures", type=int, default=0)
+    ap.add_argument("--backend", choices=sorted(PASS_BACKENDS),
+                    default="reference",
+                    help="scheduling-pass backend for the what-if engine")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    engine = DrainEngine(backend=args.backend)
 
     if args.trace == "paper":
         trace = paper_synthetic_trace(seed=args.seed)
@@ -43,13 +49,13 @@ def main() -> None:
 
     bus = EventBus()
     em = ClusterEmulator(trace, args.nodes, bus=bus, failures=failures,
-                         check_invariants=True)
+                         check_invariants=True, engine=engine)
     twin = SchedTwin(
         bus=bus, qrun=em.qrun, total_nodes=args.nodes,
         max_jobs=em.max_jobs,
         pool=PAPER_POOL if args.pool == "paper" else EXTENDED_POOL,
         free_nodes_probe=lambda: em.free_nodes,
-        ensemble=args.ensemble)
+        ensemble=args.ensemble, engine=engine)
     report = em.run(on_event=twin.pump)
 
     print(f"jobs={report.n_jobs} events={report.n_events} "

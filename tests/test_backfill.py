@@ -1,6 +1,9 @@
 """Property tests for the scheduling pass (priority + EASY backfill)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import policies

@@ -1,6 +1,9 @@
 """Drain-simulation engine tests (§3.3)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import policies

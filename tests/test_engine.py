@@ -1,0 +1,194 @@
+"""DrainEngine: backend parity + batched-drain equivalence (DESIGN.md).
+
+The contract under test:
+
+* ``pallas`` (interpret mode on CPU) and ``reference`` backends yield
+  BIT-IDENTICAL decisions — run_mask, winner, costs, drain metrics —
+  across random snapshots over the EXTENDED_POOL;
+* the batched drain is bit-for-bit the stack of k scalar drains
+  (``jax.vmap(simulate_to_drain)``), per-fork freeze semantics
+  included;
+* the emulator's static baseline is backend-independent;
+* ``whatif.pool_array`` preserves the caller's tie-break order.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import whatif
+from repro.core.des import simulate_to_drain
+from repro.core.engine import DrainEngine
+from repro.core.policies import EXTENDED_POOL, FCFS, PAPER_POOL, SJF, WFP
+
+from conftest import make_cluster_state
+
+REF = DrainEngine("reference")
+PAL = DrainEngine("pallas", interpret=True)
+
+N_SNAPSHOTS = 60  # acceptance: >= 50 random snapshots
+MAX_JOBS = 48     # fixed shape -> one compile per backend
+
+
+def _snapshots():
+    for seed in range(N_SNAPSHOTS):
+        yield make_cluster_state(
+            max_jobs=MAX_JOBS, total_nodes=32, seed=seed,
+            n_queued=4 + seed % 16, n_running=seed % 5,
+            now=100.0 + 37.0 * seed)
+
+
+def _assert_decisions_identical(da, db, ctx=""):
+    assert int(da.policy_index) == int(db.policy_index), ctx
+    np.testing.assert_array_equal(np.asarray(da.run_mask),
+                                  np.asarray(db.run_mask), err_msg=ctx)
+    np.testing.assert_array_equal(np.asarray(da.costs),
+                                  np.asarray(db.costs), err_msg=ctx)
+    np.testing.assert_array_equal(np.asarray(da.deadlocked),
+                                  np.asarray(db.deadlocked), err_msg=ctx)
+    for field, a, b in zip(da.metrics._fields, da.metrics, db.metrics):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{ctx} metric={field}")
+
+
+def test_backend_parity_extended_pool_random_snapshots():
+    pool = jnp.asarray(EXTENDED_POOL, dtype=jnp.int32)
+    for i, state in enumerate(_snapshots()):
+        d_ref = REF.decide(state, pool)
+        d_pal = PAL.decide(state, pool)
+        _assert_decisions_identical(d_ref, d_pal, ctx=f"snapshot {i}")
+
+
+def test_batched_drain_matches_vmapped_scalar():
+    pool = jnp.asarray(EXTENDED_POOL, dtype=jnp.int32)
+    vmapped = jax.jit(jax.vmap(simulate_to_drain, in_axes=(None, 0)))
+    for seed in (0, 7, 23, 41):
+        state = make_cluster_state(max_jobs=MAX_JOBS, seed=seed,
+                                   n_queued=12, n_running=3)
+        res_b = REF.drain(state, pool)
+        res_v = vmapped(state, pool)
+        eq = jax.tree.map(lambda x, y: bool(jnp.array_equal(x, y)),
+                          res_b.state, res_v.state)
+        assert jax.tree.all(eq), f"seed {seed}: state diverged"
+        np.testing.assert_array_equal(np.asarray(res_b.first_started),
+                                      np.asarray(res_v.first_started))
+        np.testing.assert_array_equal(np.asarray(res_b.deadlocked),
+                                      np.asarray(res_v.deadlocked))
+        np.testing.assert_array_equal(np.asarray(res_b.iters),
+                                      np.asarray(res_v.iters))
+
+
+def test_batched_drain_deadlock_detected_and_rest_scheduled():
+    """Deadlock is policy-independent (req > total nodes), so both
+    forks flag it — after scheduling whatever still fits."""
+    from repro.core.state import add_job, empty_state
+    state = empty_state(16, 8)
+    state = add_job(state, 0, 0.0, 9, 100.0)   # 9 > 8: can never fit
+    state = add_job(state, 1, 1.0, 2, 50.0)
+    pool = jnp.asarray([FCFS, SJF], dtype=jnp.int32)
+    res = REF.drain(state, pool)
+    dead = np.asarray(res.deadlocked)
+    assert dead[0] and dead[1]
+    # ... but job 1 still ran in both forks before the deadlock
+    assert float(res.state.jobs.start_t[0][1]) >= 0
+    assert float(res.state.jobs.start_t[1][1]) >= 0
+
+
+def test_batched_drain_freezes_finished_fork_while_others_step():
+    """The per-fork freeze path proper: forks that need different
+    event counts share one while_loop — the early finisher must freeze
+    (bit-identical to its scalar drain) while the slow fork keeps
+    stepping.  On 4 nodes with A(2n, 10s), B(2n, 30s), C(4n, 5s):
+    FCFS packs A+B first and needs 3 events to drain; SJF starts C
+    alone and finishes in 2."""
+    from repro.core.state import add_job, empty_state
+    state = empty_state(16, 4)
+    state = add_job(state, 0, 0.0, 2, 10.0)
+    state = add_job(state, 1, 1.0, 2, 30.0)
+    state = add_job(state, 2, 2.0, 4, 5.0)
+    state = state._replace(now=jnp.float32(3.0))
+    pool = jnp.asarray([FCFS, SJF], dtype=jnp.int32)
+    res = REF.drain(state, pool)
+    assert list(np.asarray(res.iters)) == [3, 2]
+    assert not np.asarray(res.deadlocked).any()
+    for i, pid in enumerate((FCFS, SJF)):
+        scalar = simulate_to_drain(state, jnp.int32(pid))
+        eq = jax.tree.map(lambda x, y: bool(jnp.array_equal(x, y[i])),
+                          scalar.state, res.state)
+        assert jax.tree.all(eq), f"fork {i} diverged from scalar drain"
+        assert int(scalar.iters) == int(np.asarray(res.iters)[i])
+
+
+def test_engine_matches_legacy_vmap_decide():
+    pool = jnp.asarray(PAPER_POOL, dtype=jnp.int32)
+    for seed in (2, 13):
+        state = make_cluster_state(max_jobs=MAX_JOBS, seed=seed)
+        _assert_decisions_identical(
+            REF.decide(state, pool),
+            whatif.decide_legacy_vmap(state, pool),
+            ctx=f"legacy seed {seed}")
+
+
+def test_ensemble_rides_batch_axis_both_backends():
+    state = make_cluster_state(max_jobs=MAX_JOBS, seed=5)
+    pool = jnp.asarray(PAPER_POOL, dtype=jnp.int32)
+    key = jax.random.PRNGKey(1)
+    d_ref = REF.decide_ensemble(state, pool, key, n_ens=3, noise=0.25)
+    d_pal = PAL.decide_ensemble(state, pool, key, n_ens=3, noise=0.25)
+    _assert_decisions_identical(d_ref, d_pal, ctx="ensemble")
+
+
+def test_emulator_static_baseline_backend_independent():
+    from repro.cluster.emulator import ClusterEmulator
+    from repro.cluster.workload import JobSpec
+    rng = np.random.default_rng(0)
+    trace = [JobSpec(j, j * 4.0, int(rng.integers(1, 12)),
+                     float(rng.uniform(30, 300)),
+                     float(rng.uniform(20, 280)), "t")
+             for j in range(24)]
+    reports = {}
+    for eng in (REF, PAL):
+        reports[eng.backend] = ClusterEmulator(
+            trace, 16, engine=eng, check_invariants=True).run(policy_id=WFP)
+    np.testing.assert_array_equal(reports["reference"].start_t,
+                                  reports["pallas"].start_t)
+    np.testing.assert_array_equal(reports["reference"].end_t,
+                                  reports["pallas"].end_t)
+
+
+def test_twin_runs_on_pallas_engine():
+    from repro.cluster.emulator import ClusterEmulator
+    from repro.cluster.workload import JobSpec
+    from repro.core.events import EventBus
+    from repro.core.twin import SchedTwin
+    rng = np.random.default_rng(1)
+    trace = [JobSpec(j, j * 6.0, int(rng.integers(1, 8)),
+                     float(rng.uniform(30, 200)),
+                     float(rng.uniform(20, 180)), "t")
+             for j in range(12)]
+    bus = EventBus()
+    em = ClusterEmulator(trace, 16, bus=bus, engine=PAL)
+    twin = SchedTwin(bus=bus, qrun=em.qrun, total_nodes=16,
+                     max_jobs=em.max_jobs, engine=PAL)
+    report = em.run(on_event=twin.pump)
+    assert report.n_jobs == len(trace)
+
+
+def test_config_backend_knob():
+    from repro.configs.schedtwin import PALLAS_TWIN, PAPER_TWIN
+    assert PAPER_TWIN.make_engine() == DrainEngine("reference")
+    assert PALLAS_TWIN.make_engine().backend == "pallas"
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown pass backend"):
+        DrainEngine("cuda")
+
+
+def test_pool_array_preserves_caller_order():
+    """Regression: pool_array used to sort ids, discarding the caller's
+    tie-break priority (position = priority for select_policy)."""
+    ids = [SJF, WFP, FCFS]
+    arr = np.asarray(whatif.pool_array(ids))
+    assert list(arr) == ids
+    assert arr.dtype == np.int32
