@@ -11,14 +11,15 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (figure1_jobdist, figure3_radar, overhead,
-                            roofline, table1_policy_dist)
+    from benchmarks import (bursty, figure1_jobdist, figure3_radar,
+                            overhead, roofline, table1_policy_dist)
     suite = {
         "figure1_jobdist": figure1_jobdist.main,
         "figure3_radar": figure3_radar.main,
         "table1_policy_dist": table1_policy_dist.main,
         "overhead": overhead.main,
         "roofline": roofline.main,
+        "bursty": bursty.main,
     }
     chosen = sys.argv[1:] or list(suite)
     t0 = time.perf_counter()

@@ -21,12 +21,19 @@ for pid in (FCFS, WFP, SJF):
     per_policy[policy_name(pid)] = report.metric_dict()
 
 # --- the twin: simulation-in-the-loop adaptive scheduling ------------
+# ``pool`` takes the sweep grammar (DESIGN.md §5): one what-if fork per
+# term/grid point, all drained in ONE batched engine call.  "paper" is
+# the §4.1 pool {WFP, FCFS, SJF}; a DRAS-style parameter sweep rides
+# the same fork axis, e.g.
+#     pool="extended,wfp:a=1..5x5:tau=600..7200x5"   # k=32 forks
+#     pool="paper,expf:tau=600,lin:est=1:wait=-0.01" # custom scorers
 bus = EventBus()
 emulator = ClusterEmulator(trace, total_nodes=32, bus=bus)
 twin = SchedTwin(bus=bus,
                  qrun=emulator.qrun,              # §3.5 decision feedback
                  total_nodes=32,
                  max_jobs=emulator.max_jobs,
+                 pool="paper",
                  free_nodes_probe=lambda: emulator.free_nodes)  # §3.2
 report = emulator.run(on_event=twin.pump)         # ①→⑦ loop per event
 per_policy["SchedTwin"] = report.metric_dict()

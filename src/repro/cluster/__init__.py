@@ -1,9 +1,11 @@
 """Physical-system side: PBS-like cluster emulator, workloads, failures."""
-from repro.cluster.workload import (JobSpec, paper_synthetic_trace,
+from repro.cluster.workload import (JobSpec, bursty_trace,
+                                    paper_synthetic_trace, poisson_trace,
                                     arch_job_mix, trace_to_arrays)
 from repro.cluster.emulator import ClusterEmulator, RunReport
 
 __all__ = [
-    "JobSpec", "paper_synthetic_trace", "arch_job_mix", "trace_to_arrays",
+    "JobSpec", "paper_synthetic_trace", "poisson_trace", "bursty_trace",
+    "arch_job_mix", "trace_to_arrays",
     "ClusterEmulator", "RunReport",
 ]

@@ -177,19 +177,22 @@ class ClusterEmulator:
             now=jnp.float32(self.now),
         )
 
-    def _static_schedule(self, policy_id: int) -> None:
+    def _static_schedule(self, policy) -> None:
         started = np.asarray(self.engine.schedule_pass_starts(
-            self._mirror_state(), jnp.int32(policy_id)))
+            self._mirror_state(), policy))
         for j in np.nonzero(started)[0]:
             self._start_job(int(j), self.now)
 
     # ------------------------------------------------------------------
     def run(self,
-            policy_id: Optional[int] = None,
+            policy_id=None,
             on_event: Optional[Callable[[], None]] = None) -> RunReport:
         """Run the full trace.
 
-        static mode: pass ``policy_id``.
+        static mode: pass ``policy_id`` — a legacy integer id or a
+        parametric ``policies.PolicySpec`` fork (e.g. ``wfp_spec(a=2)``
+        to baseline one sweep point); both run through the same k=1
+        engine pass as the twin's simulator.
         twin mode:   pass ``on_event`` = twin.pump (the co-simulation
         hook called after every published event).
         """

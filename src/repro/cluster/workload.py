@@ -9,6 +9,11 @@ tail latency, which is what makes adaptive selection pay off).
 True runtimes are drawn as a fraction of the requested walltime
 (users overestimate — §3.2); the twin never sees them.
 
+``poisson_trace`` / ``bursty_trace`` are the generic scenario family:
+flat Poisson arrivals and the same process under sinusoidal (diurnal)
+arrival-rate modulation, so policy sweeps are evaluated on more than
+flat-Poisson scenarios (``python -m benchmarks.run bursty``).
+
 ``arch_job_mix`` maps the assigned LM architectures onto job classes so
 the same twin schedules a TPU training/serving fleet (examples/).
 ``swf`` helpers read/write the Standard Workload Format for replaying
@@ -78,6 +83,26 @@ def paper_synthetic_trace(seed: int = 0,
     return jobs
 
 
+def _sample_job(rng: np.random.Generator, jid: int, t: float,
+                total_nodes: int, node_range: Tuple[int, int],
+                walltime_range: Tuple[float, float],
+                accuracy: Tuple[float, float], heavy_tail: bool,
+                tag: str) -> JobSpec:
+    """One job draw shared by the Poisson-family trace generators
+    (identical RNG call order: nodes, est, acc)."""
+    lo_w, hi_w = walltime_range
+    nodes = int(rng.integers(node_range[0],
+                             min(node_range[1], total_nodes) + 1))
+    if heavy_tail:
+        mu = np.log(np.sqrt(lo_w * hi_w))
+        sigma = np.log(hi_w / lo_w) / 4.0
+        est = float(np.clip(rng.lognormal(mu, sigma), lo_w, hi_w))
+    else:
+        est = float(rng.uniform(lo_w, hi_w))
+    acc = float(rng.uniform(accuracy[0], accuracy[1]))
+    return JobSpec(jid, t, nodes, est, max(1.0, est * acc), tag)
+
+
 def poisson_trace(n_jobs: int, total_nodes: int, mean_gap: float,
                   node_range: Tuple[int, int],
                   walltime_range: Tuple[float, float],
@@ -89,19 +114,49 @@ def poisson_trace(n_jobs: int, total_nodes: int, mean_gap: float,
     rng = np.random.default_rng(seed)
     jobs: List[JobSpec] = []
     t = 0.0
-    lo_w, hi_w = walltime_range
     for jid in range(n_jobs):
         t += float(rng.exponential(mean_gap))
-        nodes = int(rng.integers(node_range[0],
-                                 min(node_range[1], total_nodes) + 1))
-        if heavy_tail:
-            mu = np.log(np.sqrt(lo_w * hi_w))
-            sigma = np.log(hi_w / lo_w) / 4.0
-            est = float(np.clip(rng.lognormal(mu, sigma), lo_w, hi_w))
-        else:
-            est = float(rng.uniform(lo_w, hi_w))
-        acc = float(rng.uniform(accuracy[0], accuracy[1]))
-        jobs.append(JobSpec(jid, t, nodes, est, max(1.0, est * acc), "poisson"))
+        jobs.append(_sample_job(rng, jid, t, total_nodes, node_range,
+                                walltime_range, accuracy, heavy_tail,
+                                "poisson"))
+    return jobs
+
+
+def bursty_trace(n_jobs: int, total_nodes: int, mean_gap: float,
+                 node_range: Tuple[int, int],
+                 walltime_range: Tuple[float, float],
+                 seed: int = 0,
+                 accuracy: Tuple[float, float] = (0.3, 1.0),
+                 heavy_tail: bool = True,
+                 period: float = 3600.0,
+                 amplitude: float = 0.8,
+                 phase: float = 0.0) -> List[JobSpec]:
+    """Bursty/diurnal arrivals: a nonhomogeneous Poisson process whose
+    rate is sinusoidally modulated on top of ``poisson_trace``'s flat
+    rate,
+
+        rate(t) = (1 + amplitude * sin(2*pi*t/period + phase)) / mean_gap,
+
+    so arrivals alternate between rush-hour bursts (rate up to
+    (1+amplitude)x the mean) and quiet troughs — the regime where
+    backfill-friendly policies and aggressive aging pull apart, which a
+    flat-Poisson evaluation never exercises.  ``amplitude`` in [0, 1);
+    0 reduces to ``poisson_trace``'s marginal statistics.  Job sizes
+    and walltimes are drawn exactly as in ``poisson_trace``.
+    """
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError(f"amplitude must be in [0, 1), got {amplitude}")
+    rng = np.random.default_rng(seed)
+    jobs: List[JobSpec] = []
+    t = 0.0
+    for jid in range(n_jobs):
+        # thin an exponential draw by the instantaneous rate at t: the
+        # local mean gap is mean_gap / (1 + A sin(...)).
+        rate = 1.0 + amplitude * np.sin(2.0 * np.pi * t / period + phase)
+        t += float(rng.exponential(mean_gap) / max(rate, 1e-9))
+        jobs.append(_sample_job(rng, jid, t, total_nodes, node_range,
+                                walltime_range, accuracy, heavy_tail,
+                                "bursty"))
     return jobs
 
 

@@ -2,34 +2,52 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple, Union
 
 from repro.core.engine import DrainEngine
-from repro.core.policies import EXTENDED_POOL, PAPER_POOL
+from repro.core.policies import (EXTENDED_POOL, PAPER_POOL, PolicyPool,
+                                 normalize_pool)
 from repro.core.scoring import PAPER_WEIGHTS, ScoreWeights
+
+#: DRAS-style 25-point sweep (5x5 grid over the WFP exponent and the
+#: aging timescale) riding alongside the 7 static specs -> k=32 forks
+#: in ONE batched drain.  Also the acceptance benchmark's pool
+#: (benchmarks/overhead.py "dras_sweep") and a ``--pool`` value for
+#: ``repro.launch.twin_loop``.
+DRAS_SWEEP_POOL = "extended,wfp:a=1..5x5:tau=600..7200x5"
 
 
 @dataclasses.dataclass(frozen=True)
 class TwinConfig:
     total_nodes: int = 32             # 32-node PBS cluster (CloudLab)
     max_jobs: int = 256
-    pool: Tuple[int, ...] = tuple(PAPER_POOL)      # WFP, FCFS, SJF
+    # Candidate pool: a tuple of legacy policy ids (lifted to their
+    # parametric fixed points) or a sweep-grammar string such as
+    # ``"paper"`` or ``DRAS_SWEEP_POOL`` (see policies.parse_pool).
+    pool: Union[str, Tuple[int, ...]] = tuple(PAPER_POOL)  # WFP, FCFS, SJF
     weights: ScoreWeights = PAPER_WEIGHTS          # 0.25 * each term
     ensemble: int = 1                 # >1 -> uncertainty ensemble (beyond)
     ensemble_noise: float = 0.3
     trace_seed: int = 0
     accuracy: Tuple[float, float] = (0.5, 1.0)     # true/estimated runtime
     # What-if engine: scheduling-pass backend ("reference" = pure-JAX
-    # oracle, "pallas" = the TPU kernel) and Pallas interpret override
-    # (None auto-detects: interpret on CPU, compiled on TPU).
-    backend: str = "reference"
+    # oracle, "pallas" = the TPU kernel, "auto" = reference on CPU /
+    # pallas on TPU — interpret-mode pallas is ~2.3x slower than
+    # reference on CPU, BENCH_overhead.json) and Pallas interpret
+    # override (None auto-detects: interpret on CPU, compiled on TPU).
+    backend: str = "auto"
     interpret: Optional[bool] = None
 
     def make_engine(self) -> DrainEngine:
         """The policy-batched drain engine this config selects."""
         return DrainEngine(backend=self.backend, interpret=self.interpret)
 
+    def make_pool(self) -> PolicyPool:
+        """The parametric candidate pool this config describes."""
+        return normalize_pool(self.pool)
+
 
 PAPER_TWIN = TwinConfig()
 EXTENDED_TWIN = TwinConfig(pool=tuple(EXTENDED_POOL))
 PALLAS_TWIN = TwinConfig(backend="pallas")
+SWEEP_TWIN = TwinConfig(pool=DRAS_SWEEP_POOL)

@@ -2,8 +2,13 @@
 from repro.core.events import Event, EventBus, EventKind
 from repro.core.state import (DONE, INVALID, QUEUED, RUNNING, JobTable,
                               SimState, empty_jobs, empty_state)
-from repro.core.policies import (EXTENDED_POOL, FCFS, PAPER_POOL, SJF, WFP,
-                                 policy_name, priority_key)
+from repro.core.policies import (EXTENDED_POOL, FAM_EXP, FAM_LIN, FAM_WFP,
+                                 FCFS, PAPER_POOL, SJF, WFP, PolicyPool,
+                                 PolicySpec, batched_priority_keys,
+                                 exp_spec, job_features, linear_spec,
+                                 normalize_pool, parse_pool, policy_name,
+                                 priority_key, priority_key_spec,
+                                 static_spec, wfp_spec)
 from repro.core.backfill import (PassResult, priority_order, schedule_pass,
                                  schedule_pass_with_order)
 from repro.core.des import (DrainMetrics, DrainResult, broadcast_state,
@@ -24,6 +29,10 @@ __all__ = [
     "INVALID", "QUEUED", "RUNNING", "DONE",
     "WFP", "FCFS", "SJF", "PAPER_POOL", "EXTENDED_POOL",
     "policy_name", "priority_key",
+    "PolicySpec", "PolicyPool", "FAM_LIN", "FAM_WFP", "FAM_EXP",
+    "priority_key_spec", "batched_priority_keys", "job_features",
+    "linear_spec", "wfp_spec", "exp_spec", "static_spec",
+    "parse_pool", "normalize_pool",
     "PassResult", "priority_order", "schedule_pass",
     "schedule_pass_with_order",
     "DrainResult", "DrainMetrics", "simulate_to_drain",

@@ -41,20 +41,26 @@ class PassResult(NamedTuple):
     shadow_time: jax.Array  # f32 scalar — reservation time (+inf if none)
 
 
-def priority_order(state: SimState, policy_id) -> jax.Array:
+def priority_order(state: SimState, policy) -> jax.Array:
     """Priority-ranked job slots for one policy: queued jobs first by
     key, invalid/running/done last.  Stable argsort -> ties fall back to
     slot (submission) order.  Batched callers (``core.engine``) compute
-    this once per event for the whole policy axis."""
+    this once per event for the whole policy axis.
+
+    ``policy`` is either a parametric ``policies.PolicySpec`` fork or a
+    legacy integer policy id (the pre-parametric oracle path)."""
     queued = state.jobs.state == QUEUED
-    keys = policies.priority_key(state.jobs, state.now, policy_id)
+    if isinstance(policy, policies.PolicySpec):
+        keys = policies.priority_key_spec(state.jobs, state.now, policy)
+    else:
+        keys = policies.priority_key(state.jobs, state.now, policy)
     keys = jnp.where(queued, keys, jnp.inf)
     return jnp.argsort(keys)
 
 
-def schedule_pass(state: SimState, policy_id) -> PassResult:
+def schedule_pass(state: SimState, policy) -> PassResult:
     """Keys + argsort + the order-driven pass (scalar convenience)."""
-    return schedule_pass_with_order(state, priority_order(state, policy_id))
+    return schedule_pass_with_order(state, priority_order(state, policy))
 
 
 def schedule_pass_with_order(state: SimState, order: jax.Array) -> PassResult:

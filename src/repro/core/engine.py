@@ -9,7 +9,11 @@ each to completion.  Instead of ``jax.vmap`` over a scalar DES, the
 (``repro.core.des.simulate_to_drain_batched``).  Per event:
 
   1. priority keys are computed and argsorted once for the WHOLE batch
-     (one (k, J) argsort, not k separate sorts inside each fork);
+     (one (k, J) argsort, not k separate sorts inside each fork) — the
+     pool is a parametric ``policies.PolicySpec`` PyTree (family (k,),
+     θ (k, P)), so DRAS-style parameter sweeps and learned scorers are
+     just more rows on the fork axis; legacy i32 id pools still work
+     through the same entry points (the bit-exact oracle path);
   2. the inherently sequential greedy + EASY-backfill pass runs through
      a registered *backend* on the batch axis;
   3. starts are applied and every fork advances to its own next
@@ -36,7 +40,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, NamedTuple, Optional
+import logging
+from typing import Callable, Dict, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,8 +50,31 @@ from repro.core import scoring
 from repro.core.backfill import priority_order, schedule_pass_with_order
 from repro.core.des import (DrainMetrics, DrainResult, broadcast_state,
                             drain_metrics, simulate_to_drain_batched)
+from repro.core.policies import PolicySpec
 from repro.core.state import QUEUED, RUNNING, SimState
 from repro.kernels import policy_eval as _pe
+
+logger = logging.getLogger(__name__)
+
+#: What the engine accepts as a pool: a parametric ``PolicySpec`` with
+#: a leading fork axis (the post-tentpole representation) or a legacy
+#: i32 id vector (kept as the bit-exact pre-parametric oracle path).
+EnginePool = Union[PolicySpec, jax.Array]
+
+
+def pool_size(pool: EnginePool) -> int:
+    """Number of forks k in a pool of either representation."""
+    if isinstance(pool, PolicySpec):
+        return pool.family.shape[0]
+    return pool.shape[0]
+
+
+def tile_pool(pool: EnginePool, n: int) -> EnginePool:
+    """Repeat a pool n times along the fork axis (ensemble stacking)."""
+    if isinstance(pool, PolicySpec):
+        return PolicySpec(jnp.tile(pool.family, n),
+                          jnp.tile(pool.theta, (n, 1)))
+    return jnp.tile(pool, n)
 
 
 class Decision(NamedTuple):
@@ -105,11 +133,16 @@ def _pallas_backend(engine: "DrainEngine") -> PassFn:
     return pass_fn
 
 
-def batched_priority_order(states: SimState, pool: jax.Array) -> jax.Array:
+def batched_priority_order(states: SimState, pool: EnginePool) -> jax.Array:
     """(k, J) priority order for the whole fork batch: one batched key
     evaluation + ONE argsort per event (stable; ties -> slot order).
     Single-sourced from ``backfill.priority_order`` so the engine can
-    never drift from the scalar oracle's tie-break semantics."""
+    never drift from the scalar oracle's tie-break semantics.
+
+    ``pool`` is a ``PolicySpec`` PyTree (family (k,), theta (k, P)) or
+    a legacy (k,) id vector; either way the fork axis is the leading
+    axis vmap maps over.  θ stays in this stage — outside the pass
+    kernel — so backends are untouched by pool parameterization."""
     return jax.vmap(priority_order)(states, pool)
 
 
@@ -126,7 +159,11 @@ class DrainEngine:
 
     Parameters
     ----------
-    backend : name in ``PASS_BACKENDS`` ("reference" | "pallas").
+    backend : name in ``PASS_BACKENDS`` ("reference" | "pallas"), or
+        "auto" — resolved at construction to "pallas" on TPU and
+        "reference" on CPU/GPU (interpret-mode pallas is ~2.3x slower
+        than reference at k=32 on CPU, see BENCH_overhead.json; the
+        kernel only pays off compiled).  The resolved choice is logged.
     interpret : Pallas interpret-mode override.  ``None`` auto-detects:
         interpret on CPU (this container), compiled on TPU.
     """
@@ -135,6 +172,12 @@ class DrainEngine:
     interpret: Optional[bool] = None
 
     def __post_init__(self) -> None:
+        if self.backend == "auto":
+            platform = jax.default_backend()
+            resolved = "pallas" if platform == "tpu" else "reference"
+            logger.info("DrainEngine backend='auto' resolved to %r "
+                        "(jax platform: %s)", resolved, platform)
+            object.__setattr__(self, "backend", resolved)
         if self.backend not in PASS_BACKENDS:
             raise ValueError(
                 f"unknown pass backend {self.backend!r}; "
@@ -149,30 +192,36 @@ class DrainEngine:
         return PASS_BACKENDS[self.backend](self)
 
     # -- drains --------------------------------------------------------
-    def drain_batched(self, states: SimState, pool: jax.Array) -> DrainResult:
+    def drain_batched(self, states: SimState, pool: EnginePool) -> DrainResult:
         """Drain pre-batched fork states (leading axis == pool)."""
         return _drain(self, states, pool)
 
-    def drain(self, state: SimState, pool: jax.Array) -> DrainResult:
+    def drain(self, state: SimState, pool: EnginePool) -> DrainResult:
         """Fork one snapshot across the pool and drain all forks."""
-        return _drain(self, broadcast_state(state, pool.shape[0]), pool)
+        return _drain(self, broadcast_state(state, pool_size(pool)), pool)
 
     # -- decision cycles ----------------------------------------------
-    def decide(self, state: SimState, pool: jax.Array,
+    def decide(self, state: SimState, pool: EnginePool,
                weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS
                ) -> Decision:
         return _decide(self, state, pool, weights)
 
-    def decide_ensemble(self, state: SimState, pool: jax.Array,
+    def decide_ensemble(self, state: SimState, pool: EnginePool,
                         key: jax.Array, n_ens: int = 8, noise: float = 0.3,
                         weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
                         ) -> Decision:
         return _decide_ensemble(self, state, pool, key, n_ens, noise, weights)
 
     # -- single pass (k=1) — the emulator's static baseline mode -------
-    def schedule_pass_starts(self, state: SimState, policy_id) -> jax.Array:
-        """Started mask (J,) for ONE policy on an unbatched state."""
-        return _single_pass(self, state, jnp.asarray(policy_id, jnp.int32))
+    def schedule_pass_starts(self, state: SimState, policy) -> jax.Array:
+        """Started mask (J,) for ONE policy (``PolicySpec`` fork or
+        legacy integer id) on an unbatched state."""
+        if isinstance(policy, PolicySpec):
+            pool = PolicySpec(policy.family.reshape(1),
+                              policy.theta.reshape(1, -1))
+        else:
+            pool = jnp.asarray(policy, jnp.int32).reshape(1)
+        return _single_pass(self, state, pool)
 
 
 # ----------------------------------------------------------------------
@@ -180,7 +229,7 @@ class DrainEngine:
 # ----------------------------------------------------------------------
 
 def _drain_impl(engine: DrainEngine, states: SimState,
-                pool: jax.Array) -> DrainResult:
+                pool: EnginePool) -> DrainResult:
     return simulate_to_drain_batched(
         states,
         lambda st: batched_priority_order(st, pool),
@@ -189,13 +238,13 @@ def _drain_impl(engine: DrainEngine, states: SimState,
 
 @functools.partial(jax.jit, static_argnames=("engine",))
 def _drain(engine: DrainEngine, states: SimState,
-           pool: jax.Array) -> DrainResult:
+           pool: EnginePool) -> DrainResult:
     return _drain_impl(engine, states, pool)
 
 
-def _decide_impl(engine: DrainEngine, state: SimState, pool: jax.Array,
+def _decide_impl(engine: DrainEngine, state: SimState, pool: EnginePool,
                  weights: scoring.ScoreWeights) -> Decision:
-    k = pool.shape[0]
+    k = pool_size(pool)
     eval_mask = state.jobs.state == QUEUED
     res = _drain_impl(engine, broadcast_state(state, k), pool)
     metrics = jax.vmap(drain_metrics, in_axes=(0, None))(res, eval_mask)
@@ -212,14 +261,14 @@ def _decide_impl(engine: DrainEngine, state: SimState, pool: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("engine", "weights"))
-def _decide(engine: DrainEngine, state: SimState, pool: jax.Array,
+def _decide(engine: DrainEngine, state: SimState, pool: EnginePool,
             weights: scoring.ScoreWeights) -> Decision:
     return _decide_impl(engine, state, pool, weights)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("engine", "n_ens", "noise", "weights"))
-def _decide_ensemble(engine: DrainEngine, state: SimState, pool: jax.Array,
+def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
                      key: jax.Array, n_ens: int, noise: float,
                      weights: scoring.ScoreWeights) -> Decision:
     """k * n_ens forks ride ONE batch axis through ONE drain.
@@ -230,7 +279,7 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: jax.Array,
     cost is the ensemble mean; the qrun set comes from member 0 of the
     winning policy.
     """
-    k = pool.shape[0]
+    k = pool_size(pool)
     cap = state.jobs.capacity
 
     eps = jax.random.normal(key, (n_ens, cap))
@@ -240,7 +289,7 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: jax.Array,
 
     states = broadcast_state(state, n_ens * k)
     states = states._replace(jobs=states.jobs._replace(est_runtime=est_b))
-    pool_b = jnp.tile(pool, n_ens)
+    pool_b = tile_pool(pool, n_ens)
 
     eval_mask = state.jobs.state == QUEUED
     res = _drain_impl(engine, states, pool_b)
@@ -262,9 +311,8 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("engine",))
 def _single_pass(engine: DrainEngine, state: SimState,
-                 policy_id: jax.Array) -> jax.Array:
+                 pool: EnginePool) -> jax.Array:
     states = broadcast_state(state, 1)
-    pool = policy_id.reshape(1)
     order = batched_priority_order(states, pool)
     return engine.pass_fn()(states, order)[0]
 

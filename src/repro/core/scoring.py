@@ -10,12 +10,15 @@ costs (smaller is better); we therefore *minimize* Score — the paper's
 see DESIGN.md §4.  Wait times are scored in minutes so the WT and SD
 terms live on comparable scales within one trace.
 
-Ties: identical costs are broken by policy-id order, which is the
-paper's WFP -> FCFS -> SJF priority (ids are ordered that way).
+Ties: identical costs are broken by pool *position* (``select_policy``
+is an argmin with first-occurrence wins).  With the parametric
+``PolicySpec`` pools this stays the tie-break: the paper's WFP -> FCFS
+-> SJF priority is simply the order those fixed points occupy in the
+pool, and sweep grid points rank by their expansion order.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Sequence
+from typing import Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -94,8 +97,14 @@ def radar_report(per_policy: Dict[str, Dict[str, float]]) -> Dict[str, float]:
     return {n: radar_area(v) for n, v in normed.items()}
 
 
-def summarize_pool(names: Sequence[str], metrics: DrainMetrics) -> Dict[str, Dict[str, float]]:
-    """Stack vmapped DrainMetrics (leading policy axis) into dicts."""
+def summarize_pool(names, metrics: DrainMetrics) -> Dict[str, Dict[str, float]]:
+    """Stack vmapped DrainMetrics (leading policy axis) into dicts.
+
+    ``names`` is a sequence of per-fork labels or a
+    ``policies.PolicyPool`` (whose family+θ names are used), so sweep
+    reports identify each grid point, not just "policy i"."""
+    if hasattr(names, "names"):  # PolicyPool
+        names = names.names
     out = {}
     for i, n in enumerate(names):
         out[n] = {

@@ -14,16 +14,15 @@ PBS deployment exposes.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sync, telemetry
 from repro.core.engine import DrainEngine
 from repro.core.events import Event, EventBus, EventKind
-from repro.core.policies import PAPER_POOL, policy_name
+from repro.core.policies import PAPER_POOL, PoolLike, normalize_pool
 from repro.core.scoring import PAPER_WEIGHTS, ScoreWeights
 from repro.core.state import SimState, empty_state
 
@@ -43,12 +42,17 @@ class SchedTwin:
         Authoritative node-availability probe (§3.2's "command-line
         tools"); when given, the mirror's free count is resynced before
         every decision.
-    pool : sequence of policy ids, tie-break order (default: paper's
-        WFP, FCFS, SJF).
+    pool : candidate pool in tie-break order (default: paper's WFP,
+        FCFS, SJF).  Any ``policies.normalize_pool`` input works: a
+        ``PolicyPool``, a stacked ``PolicySpec``, a sweep-grammar
+        string (``"paper,wfp:a=1..5x5"``), or a sequence of legacy
+        policy ids — ids are lifted to their parametric fixed points,
+        which produce bit-identical decisions (tests/test_policyspec).
     ensemble : if > 1, use uncertainty-ensemble decisions (beyond paper).
     engine : the policy-batched what-if engine (``core.engine``); pick
         the scheduling-pass backend here (``DrainEngine("pallas")`` for
-        the TPU kernel).  Default: the pure-JAX reference backend.
+        the TPU kernel, ``DrainEngine("auto")`` to pick per platform).
+        Default: the pure-JAX reference backend.
     """
 
     CONSUMER = "schedtwin"
@@ -58,7 +62,7 @@ class SchedTwin:
                  qrun: Callable[[List[int], float], None],
                  total_nodes: int,
                  max_jobs: int = 256,
-                 pool: Sequence[int] = PAPER_POOL,
+                 pool: PoolLike = PAPER_POOL,
                  weights: ScoreWeights = PAPER_WEIGHTS,
                  free_nodes_probe: Optional[Callable[[], int]] = None,
                  ensemble: int = 1,
@@ -67,8 +71,7 @@ class SchedTwin:
                  seed: int = 0) -> None:
         self.bus = bus
         self.qrun = qrun
-        self.pool_ids = list(pool)
-        self.pool = jnp.asarray(self.pool_ids, dtype=jnp.int32)
+        self.pool = normalize_pool(pool)
         self.weights = weights
         self.state: SimState = empty_state(max_jobs, total_nodes)
         self.telemetry = telemetry.Telemetry()
@@ -111,18 +114,21 @@ class SchedTwin:
             if self.ensemble > 1:
                 self._key, sub = jax.random.split(self._key)
                 decision = self.engine.decide_ensemble(
-                    self.state, self.pool, sub,
+                    self.state, self.pool.spec, sub,
                     n_ens=self.ensemble, noise=self.ensemble_noise,
                     weights=self.weights)
             else:
-                decision = self.engine.decide(self.state, self.pool,
+                decision = self.engine.decide(self.state, self.pool.spec,
                                               weights=self.weights)
             run_mask = np.asarray(decision.run_mask)  # blocks for timing
 
         job_ids = [int(j) for j in np.nonzero(run_mask)[0]]
-        winner = policy_name(self.pool_ids[int(decision.policy_index)])
-        costs = {policy_name(pid): float(c)
-                 for pid, c in zip(self.pool_ids, np.asarray(decision.costs))}
+        # decisions are reported by family name + θ ("WFP",
+        # "wfp[a=2,tau=600]", ...); pool position stays the tie-break.
+        winner = self.pool.names[int(decision.policy_index)]
+        costs = {name: float(c)
+                 for name, c in zip(self.pool.names,
+                                    np.asarray(decision.costs))}
         self.telemetry.record(telemetry.CycleRecord(
             time=t, wall_seconds=sw.seconds, policy=winner,
             costs=costs, n_started=len(job_ids), started_jobs=job_ids))

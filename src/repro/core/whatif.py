@@ -7,14 +7,21 @@ batched DES advanced in lock-step for all policies by the
 shared (broadcast, never copied per policy) — the same "objects share a
 common database, only carry event metadata" property, but in SPMD form.
 
+A pool is a **``PolicyPool``** — a stacked parametric ``PolicySpec``
+(family (k,), θ (k, P)) plus per-fork display names (DESIGN.md §5).
+Every entry point also accepts a sweep-grammar string (``"paper"``,
+``"wfp:a=1..5x5"``), a raw ``PolicySpec`` stack, or a legacy i32 id
+vector (``pool_array`` is the thin adapter that builds one); ids flow
+through the engine's bit-exact pre-parametric oracle path.
+
 This module is the thin public API over the engine:
 
   * ``decide`` / ``decide_ensemble`` — one scheduling cycle on the
     default (or a caller-supplied) engine; ensemble members ride the
     same batch axis, so k * n_ens forks drain in ONE while_loop;
   * ``sharded_whatif`` — the fork axis of the batched engine sharded
-    over a device mesh for pools of hundreds of policies (fleet-scale
-    twins);
+    over a device mesh for pools of hundreds of forks (θ shards with
+    the fork axis: a parameter sweep is just a longer, shardable pool);
   * ``decide_legacy_vmap`` — the pre-engine path (``jax.vmap`` over the
     scalar DES), kept as a regression oracle and as the baseline the
     overhead benchmark compares the batched engine against.
@@ -22,7 +29,7 @@ This module is the thin public API over the engine:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,29 +37,47 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import scoring
 from repro.core.des import drain_metrics, simulate_to_drain
-from repro.core.engine import DEFAULT_ENGINE, Decision, DrainEngine
+from repro.core.engine import (DEFAULT_ENGINE, Decision, DrainEngine,
+                               EnginePool)
+from repro.core.policies import (PolicyPool, PolicySpec, normalize_pool,
+                                 parse_pool)
 from repro.core.state import QUEUED, SimState
 
 __all__ = [
-    "Decision", "decide", "decide_ensemble", "decide_legacy_vmap",
-    "sharded_whatif", "paper_pool", "pool_array",
+    "Decision", "PolicyPool", "decide", "decide_ensemble",
+    "decide_legacy_vmap", "sharded_whatif", "paper_pool", "pool_array",
 ]
 
+#: Anything the public decide functions take as a pool.
+PoolArg = Union[PolicyPool, PolicySpec, str, jax.Array]
 
-def decide(state: SimState, pool: jax.Array,
+
+def _engine_pool(pool: PoolArg) -> EnginePool:
+    """Unwrap to what the engine consumes: a PolicySpec stack or a
+    legacy id vector (passed through untouched — the oracle path)."""
+    if isinstance(pool, PolicyPool):
+        return pool.spec
+    if isinstance(pool, str):
+        return parse_pool(pool).spec
+    return pool  # PolicySpec stack or legacy id array
+
+
+def decide(state: SimState, pool: PoolArg,
            weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
            engine: Optional[DrainEngine] = None) -> Decision:
     """One scheduling cycle: fork k sims, score, select, extract qrun set.
 
-    ``pool`` is an i32 vector of policy ids ordered by tie-break
-    priority.  Everything (all k drain simulations included) is a single
-    XLA computation — the per-cycle overhead the paper reports as "a
-    few seconds" is microseconds here (see benchmarks/overhead.py).
+    ``pool`` is a ``PolicyPool`` / ``PolicySpec`` stack / grammar
+    string / legacy i32 id vector, ordered by tie-break priority.
+    Everything (all k drain simulations included) is a single XLA
+    computation — the per-cycle overhead the paper reports as "a few
+    seconds" is microseconds here (see benchmarks/overhead.py).
     """
-    return (engine or DEFAULT_ENGINE).decide(state, pool, weights=weights)
+    return (engine or DEFAULT_ENGINE).decide(
+        state, _engine_pool(pool), weights=weights)
 
 
-def decide_ensemble(state: SimState, pool: jax.Array, key: jax.Array,
+def decide_ensemble(state: SimState, pool: PoolArg, key: jax.Array,
                     n_ens: int = 8, noise: float = 0.3,
                     weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
                     engine: Optional[DrainEngine] = None) -> Decision:
@@ -65,7 +90,8 @@ def decide_ensemble(state: SimState, pool: jax.Array, key: jax.Array,
     ride one batch axis through one drain.
     """
     return (engine or DEFAULT_ENGINE).decide_ensemble(
-        state, pool, key, n_ens=n_ens, noise=noise, weights=weights)
+        state, _engine_pool(pool), key, n_ens=n_ens, noise=noise,
+        weights=weights)
 
 
 # ----------------------------------------------------------------------
@@ -106,10 +132,16 @@ def sharded_whatif(mesh: Mesh, axis: str = "data",
                    engine: Optional[DrainEngine] = None):
     """Fleet-scale what-if: the fork (policy/ensemble) axis of the
     batched engine sharded over ``axis`` of ``mesh``.  Returns a jitted
-    function with the same signature as ``decide`` whose pool must be
-    divisible by the axis size.  The snapshot is replicated (it is a
+    function with the same signature as ``decide`` whose pool size must
+    be divisible by the axis size.  The snapshot is replicated (it is a
     few KB); only the fork axis is split, mirroring "k simulator copies
     sharing one database" at pod scale.
+
+    The pool sharding is a PyTree prefix, so it applies equally to a
+    legacy (k,) id vector and to a ``PolicySpec`` stack — for specs the
+    θ matrix (k, P) is partitioned on its fork axis together with the
+    family vector: a 128-point parameter sweep splits across devices
+    exactly like 128 distinct policies.
     """
     from repro.core.engine import _decide_impl  # the unjitted body
 
@@ -120,10 +152,13 @@ def sharded_whatif(mesh: Mesh, axis: str = "data",
     @functools.partial(jax.jit,
                        in_shardings=(replicated, pool_sharding),
                        out_shardings=replicated)
-    def decide_sharded(state: SimState, pool: jax.Array) -> Decision:
+    def decide_sharded(state: SimState, pool: EnginePool) -> Decision:
         return _decide_impl(eng, state, pool, scoring.PAPER_WEIGHTS)
 
-    return decide_sharded
+    def wrapper(state: SimState, pool: PoolArg) -> Decision:
+        return decide_sharded(state, _engine_pool(pool))
+
+    return wrapper
 
 
 def paper_pool() -> jax.Array:
@@ -132,8 +167,10 @@ def paper_pool() -> jax.Array:
 
 
 def pool_array(ids: Sequence[int]) -> jax.Array:
-    """Pool vector in the CALLER's order.  Position is tie-break
-    priority (``select_policy`` is an argmin with first-occurrence
-    wins), so the order must be preserved — an earlier version sorted
-    ids here, silently discarding custom tie-break orders."""
+    """Thin adapter: legacy id pool in the CALLER's order.  Position is
+    tie-break priority (``select_policy`` is an argmin with
+    first-occurrence wins), so the order must be preserved — an earlier
+    version sorted ids here, silently discarding custom tie-break
+    orders.  ``policies.PolicyPool.from_ids`` lifts the same ids into
+    the parametric space."""
     return jnp.asarray(list(ids), dtype=jnp.int32)

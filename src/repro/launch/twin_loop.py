@@ -4,6 +4,14 @@
     python -m repro.launch.twin_loop --pool extended --ensemble 8
     python -m repro.launch.twin_loop --failures 2     # fault injection
     python -m repro.launch.twin_loop --backend pallas # kernel what-ifs
+    python -m repro.launch.twin_loop --trace bursty   # diurnal arrivals
+
+``--pool`` takes the sweep grammar (``repro.core.policies.parse_pool``):
+one fork per grid point, e.g. a DRAS-style 25-point parameter sweep
+riding with the 7 static policies (k=32 forks, ONE batched drain):
+
+    python -m repro.launch.twin_loop \\
+        --pool "extended,wfp:a=1..5x5:tau=600..7200x5"
 """
 from __future__ import annotations
 
@@ -12,30 +20,45 @@ import argparse
 import numpy as np
 
 from repro.cluster.emulator import ClusterEmulator, FailureSpec
-from repro.cluster.workload import paper_synthetic_trace, poisson_trace
+from repro.cluster.workload import (bursty_trace, paper_synthetic_trace,
+                                    poisson_trace)
 from repro.core.engine import PASS_BACKENDS, DrainEngine
 from repro.core.events import EventBus
-from repro.core.policies import EXTENDED_POOL, PAPER_POOL
+from repro.core.policies import parse_pool
 from repro.core.twin import SchedTwin
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--trace", choices=("paper", "poisson"), default="paper")
+    ap.add_argument("--trace", choices=("paper", "poisson", "bursty"),
+                    default="paper")
     ap.add_argument("--jobs", type=int, default=150)
     ap.add_argument("--nodes", type=int, default=32)
-    ap.add_argument("--pool", choices=("paper", "extended"), default="paper")
+    ap.add_argument("--pool", default="paper",
+                    help="pool grammar: comma-separated policy terms, "
+                         "optionally swept, e.g. 'paper', 'extended', "
+                         "'wfp,fcfs,sjf,wfp:a=1..5x5' (see "
+                         "policies.parse_pool)")
     ap.add_argument("--ensemble", type=int, default=1)
     ap.add_argument("--failures", type=int, default=0)
-    ap.add_argument("--backend", choices=sorted(PASS_BACKENDS),
-                    default="reference",
-                    help="scheduling-pass backend for the what-if engine")
+    ap.add_argument("--backend",
+                    choices=sorted(PASS_BACKENDS) + ["auto"],
+                    default="auto",
+                    help="scheduling-pass backend for the what-if engine "
+                         "(auto: reference on CPU, pallas on TPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     engine = DrainEngine(backend=args.backend)
+    pool = parse_pool(args.pool)
+    print(f"pool: k={len(pool)} forks "
+          f"[{', '.join(pool.names[:8])}{', ...' if len(pool) > 8 else ''}] "
+          f"backend={engine.backend}")
 
     if args.trace == "paper":
         trace = paper_synthetic_trace(seed=args.seed)
+    elif args.trace == "bursty":
+        trace = bursty_trace(args.jobs, args.nodes, 8.0, (1, args.nodes),
+                             (30.0, 900.0), seed=args.seed)
     else:
         trace = poisson_trace(args.jobs, args.nodes, 8.0, (1, args.nodes),
                               (30.0, 900.0), seed=args.seed)
@@ -52,8 +75,7 @@ def main() -> None:
                          check_invariants=True, engine=engine)
     twin = SchedTwin(
         bus=bus, qrun=em.qrun, total_nodes=args.nodes,
-        max_jobs=em.max_jobs,
-        pool=PAPER_POOL if args.pool == "paper" else EXTENDED_POOL,
+        max_jobs=em.max_jobs, pool=pool,
         free_nodes_probe=lambda: em.free_nodes,
         ensemble=args.ensemble, engine=engine)
     report = em.run(on_event=twin.pump)

@@ -1,0 +1,309 @@
+"""Parametric policy space (PolicySpec) — fixed-point parity + sweeps.
+
+The tentpole contract under test (DESIGN.md §5):
+
+* every static policy expressed as a ``PolicySpec`` fixed point yields
+  **bit-identical** priority keys, and — through the engine —
+  bit-identical decisions (winner, qrun set, costs, metrics) to the
+  pre-refactor integer-id path, over >= 60 random snapshots, under
+  BOTH pass backends;
+* sweep pools (k >= 32: DRAS-style θ grids + statics) drain through
+  one batched engine call;
+* the pool grammar expands terms/sweeps predictably;
+* ``backend="auto"`` resolves per platform;
+* ``bursty_trace`` modulates arrivals and runs through the emulator.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policies, whatif
+from repro.core.engine import DrainEngine, pool_size, tile_pool
+from repro.core.policies import (EXTENDED_POOL, FAM_EXP, FAM_LIN, FAM_WFP,
+                                 PAPER_POOL, PolicyPool, PolicySpec,
+                                 normalize_pool, parse_pool, static_spec,
+                                 wfp_spec)
+
+from conftest import make_cluster_state
+
+REF = DrainEngine("reference")
+PAL = DrainEngine("pallas", interpret=True)
+
+N_SNAPSHOTS = 60  # acceptance: >= 60 random snapshots
+MAX_JOBS = 48     # fixed shape -> one compile per (backend, pool kind)
+
+ID_POOL = jnp.asarray(EXTENDED_POOL, dtype=jnp.int32)
+SPEC_POOL = PolicyPool.from_ids(EXTENDED_POOL)
+
+
+def _snapshots(n=N_SNAPSHOTS):
+    for seed in range(n):
+        yield make_cluster_state(
+            max_jobs=MAX_JOBS, total_nodes=32, seed=seed,
+            n_queued=4 + seed % 16, n_running=seed % 5,
+            now=100.0 + 37.0 * seed)
+
+
+def _assert_decisions_identical(da, db, ctx=""):
+    assert int(da.policy_index) == int(db.policy_index), ctx
+    np.testing.assert_array_equal(np.asarray(da.run_mask),
+                                  np.asarray(db.run_mask), err_msg=ctx)
+    np.testing.assert_array_equal(np.asarray(da.costs),
+                                  np.asarray(db.costs), err_msg=ctx)
+    np.testing.assert_array_equal(np.asarray(da.deadlocked),
+                                  np.asarray(db.deadlocked), err_msg=ctx)
+    for field, a, b in zip(da.metrics._fields, da.metrics, db.metrics):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{ctx} metric={field}")
+
+
+# ----------------------------------------------------------------------
+# Fixed-point parity: spec path == integer-id path, bit for bit.
+# ----------------------------------------------------------------------
+
+def test_static_specs_bitwise_key_parity():
+    """Every static policy's PolicySpec produces bit-identical priority
+    keys to the legacy 7-row stack on every snapshot."""
+    for i, state in enumerate(_snapshots()):
+        for pid in EXTENDED_POOL:
+            k_id = np.asarray(policies.priority_key(
+                state.jobs, state.now, jnp.int32(pid)))
+            k_sp = np.asarray(policies.priority_key_spec(
+                state.jobs, state.now, static_spec(pid)))
+            np.testing.assert_array_equal(
+                k_id, k_sp,
+                err_msg=f"snapshot {i} policy {policies.policy_name(pid)}")
+
+
+@pytest.mark.parametrize("engine", [REF, PAL], ids=["reference", "pallas"])
+def test_static_spec_decisions_match_integer_path(engine):
+    """Acceptance: spec-pool decisions (winner, qrun set, costs,
+    metrics) are bit-identical to the integer-id path over >= 60 random
+    snapshots, under both backends."""
+    for i, state in enumerate(_snapshots()):
+        d_id = engine.decide(state, ID_POOL)
+        d_sp = engine.decide(state, SPEC_POOL.spec)
+        _assert_decisions_identical(
+            d_id, d_sp, ctx=f"snapshot {i} backend {engine.backend}")
+
+
+def test_spec_ensemble_matches_integer_path():
+    state = make_cluster_state(max_jobs=MAX_JOBS, seed=17)
+    key = jax.random.PRNGKey(3)
+    d_id = REF.decide_ensemble(state, ID_POOL, key, n_ens=3, noise=0.25)
+    d_sp = REF.decide_ensemble(state, SPEC_POOL.spec, key,
+                               n_ens=3, noise=0.25)
+    _assert_decisions_identical(d_id, d_sp, ctx="ensemble")
+
+
+def test_emulator_static_spec_matches_static_id():
+    """The emulator's static baseline is identical whether the policy
+    is an integer id or its PolicySpec fixed point."""
+    from repro.cluster.emulator import ClusterEmulator
+    from repro.cluster.workload import JobSpec
+    rng = np.random.default_rng(2)
+    trace = [JobSpec(j, j * 4.0, int(rng.integers(1, 12)),
+                     float(rng.uniform(30, 300)),
+                     float(rng.uniform(20, 280)), "t")
+             for j in range(24)]
+    rep_id = ClusterEmulator(trace, 16, check_invariants=True).run(
+        policy_id=policies.WFP)
+    rep_sp = ClusterEmulator(trace, 16, check_invariants=True).run(
+        policy_id=static_spec(policies.WFP))
+    np.testing.assert_array_equal(rep_id.start_t, rep_sp.start_t)
+    np.testing.assert_array_equal(rep_id.end_t, rep_sp.end_t)
+
+
+def test_twin_on_spec_pool_matches_twin_on_id_pool():
+    """SchedTwin normalizes id pools to spec fixed points; a twin fed
+    the grammar string must behave identically to one fed the ids."""
+    from repro.cluster.emulator import ClusterEmulator
+    from repro.cluster.workload import poisson_trace
+    from repro.core.events import EventBus
+    from repro.core.twin import SchedTwin
+
+    trace = poisson_trace(24, 16, 6.0, (1, 10), (30.0, 300.0), seed=9)
+    reports = {}
+    for pool in (list(PAPER_POOL), "paper"):
+        bus = EventBus()
+        em = ClusterEmulator(trace, 16, bus=bus, check_invariants=True)
+        twin = SchedTwin(bus=bus, qrun=em.qrun, total_nodes=16,
+                         max_jobs=em.max_jobs, pool=pool)
+        reports[str(pool)] = (em.run(on_event=twin.pump), twin)
+    (rep_a, twin_a), (rep_b, twin_b) = reports.values()
+    np.testing.assert_array_equal(rep_a.start_t, rep_b.start_t)
+    assert (twin_a.telemetry.policy_start_distribution()
+            == twin_b.telemetry.policy_start_distribution())
+
+
+# ----------------------------------------------------------------------
+# Sweep pools: k >= 32 parameter grids through one batched drain.
+# ----------------------------------------------------------------------
+
+def test_sweep_pool_k32_drains_batched():
+    from repro.configs.schedtwin import DRAS_SWEEP_POOL
+    pool = parse_pool(DRAS_SWEEP_POOL)
+    assert len(pool) == 32  # 7 statics + 5x5 (a, tau) grid
+    state = make_cluster_state(max_jobs=MAX_JOBS, seed=23, n_queued=14,
+                               n_running=3)
+    d = REF.decide(state, pool.spec)
+    costs = np.asarray(d.costs)
+    assert costs.shape == (32,)
+    assert np.all(np.isfinite(costs))          # nothing deadlocked/nan
+    assert not np.asarray(d.deadlocked).any()
+    # the winner's qrun set is reproducible from its own fork
+    best = int(d.policy_index)
+    res = REF.drain(state, pool.spec)
+    np.testing.assert_array_equal(np.asarray(d.run_mask),
+                                  np.asarray(res.first_started)[best])
+
+
+def test_sweep_theta_actually_changes_decisions():
+    """θ is live: an extreme-aging WFP fork orders the queue unlike
+    plain WFP on a snapshot with spread-out waits."""
+    state = make_cluster_state(max_jobs=MAX_JOBS, seed=31, n_queued=12,
+                               n_running=2)
+    k_plain = np.asarray(policies.priority_key_spec(
+        state.jobs, state.now, wfp_spec()))
+    k_aged = np.asarray(policies.priority_key_spec(
+        state.jobs, state.now, wfp_spec(a=1.0, tau=60.0)))
+    queued = np.asarray(state.jobs.state) == 1
+    assert not np.array_equal(np.argsort(k_plain[queued]),
+                              np.argsort(k_aged[queued]))
+
+
+def test_sharded_whatif_accepts_spec_pool(mesh11):
+    decide_sharded = whatif.sharded_whatif(mesh11)
+    state = make_cluster_state(max_jobs=MAX_JOBS, seed=4)
+    pool = parse_pool("extended,wfp:a=1..3x3")   # k=10, divisible by 1
+    d = decide_sharded(state, pool)
+    assert d.costs.shape == (10,)
+    d_ref = REF.decide(state, pool.spec)
+    _assert_decisions_identical(d, d_ref, ctx="sharded vs local")
+
+
+def test_pool_size_and_tile_pool_both_kinds():
+    spec = parse_pool("paper").spec
+    assert pool_size(spec) == 3
+    assert pool_size(ID_POOL) == 7
+    tiled = tile_pool(spec, 2)
+    assert pool_size(tiled) == 6
+    np.testing.assert_array_equal(np.asarray(tiled.family)[:3],
+                                  np.asarray(tiled.family)[3:])
+    assert pool_size(tile_pool(ID_POOL, 3)) == 21
+
+
+# ----------------------------------------------------------------------
+# Grammar + naming.
+# ----------------------------------------------------------------------
+
+def test_parse_pool_grammar_expansion():
+    pool = parse_pool("wfp,fcfs,sjf,wfp:a=1..5x5")
+    assert len(pool) == 8
+    assert pool.names[:3] == ("WFP", "FCFS", "SJF")
+    assert pool.names[3] == "wfp[a=1]" and pool.names[7] == "wfp[a=5]"
+    fam = np.asarray(pool.spec.family)
+    assert fam[0] == FAM_WFP and fam[1] == FAM_LIN and fam[2] == FAM_LIN
+    a = np.asarray(pool.spec.theta)[3:, policies.TH_A]
+    np.testing.assert_allclose(a, [1, 2, 3, 4, 5])
+
+
+def test_parse_pool_cartesian_product_and_families():
+    pool = parse_pool("expf:tau=600..1800x3,lin:est=1:wait=-0.01")
+    assert len(pool) == 4
+    fam = np.asarray(pool.spec.family)
+    assert list(fam) == [FAM_EXP] * 3 + [FAM_LIN]
+    grid = parse_pool("wfp:a=1..2x2:tau=600..1200x2")
+    assert len(grid) == 4  # 2x2 cartesian, rightmost fastest
+    th = np.asarray(grid.spec.theta)
+    np.testing.assert_allclose(th[:, policies.TH_A], [1, 1, 2, 2])
+    np.testing.assert_allclose(th[:, policies.TH_TAU],
+                               [600, 1200, 600, 1200])
+
+
+def test_parse_pool_rejects_bad_terms():
+    with pytest.raises(ValueError, match="unknown pool term"):
+        parse_pool("nope")
+    with pytest.raises(ValueError, match="params are"):
+        parse_pool("expf:a=2")
+    with pytest.raises(ValueError, match="takes no parameters"):
+        parse_pool("fcfs:a=2")
+    with pytest.raises(ValueError, match="lin weights index features"):
+        parse_pool("lin:bogus=1")
+    with pytest.raises(ValueError, match=">= 2 points"):
+        parse_pool("wfp:a=1..5x1")
+
+
+def test_normalize_pool_lifts_scalar_spec():
+    """A scalar (unstacked) fork is lifted to a k=1 pool, so
+    SchedTwin(pool=wfp_spec(a=2)) works."""
+    pool = normalize_pool(wfp_spec(a=2.0))
+    assert len(pool) == 1
+    assert pool.names == ("wfp[a=2]",)
+
+
+def test_normalize_pool_roundtrips():
+    from_ids = normalize_pool(list(EXTENDED_POOL))
+    assert from_ids.names == tuple(
+        policies.POLICY_NAMES[i] for i in EXTENDED_POOL)
+    as_spec = normalize_pool(from_ids.spec)       # bare PolicySpec stack
+    assert as_spec.names == from_ids.names        # statics re-recognized
+    assert normalize_pool(from_ids) is from_ids
+    assert len(normalize_pool("paper")) == 3
+
+
+def test_pool_concat_preserves_order():
+    pool = parse_pool("paper") + parse_pool("expf:tau=600")
+    assert len(pool) == 4
+    assert pool.names[-1] == "expf[tau=600]"
+
+
+# ----------------------------------------------------------------------
+# backend="auto" + bursty workload satellites.
+# ----------------------------------------------------------------------
+
+def test_backend_auto_resolves_per_platform(caplog):
+    import logging
+    with caplog.at_level(logging.INFO, logger="repro.core.engine"):
+        eng = DrainEngine("auto")
+    expected = "pallas" if jax.default_backend() == "tpu" else "reference"
+    assert eng.backend == expected
+    assert any("resolved" in r.message for r in caplog.records)
+
+
+def test_twin_config_auto_backend_and_pool():
+    from repro.configs.schedtwin import SWEEP_TWIN, TwinConfig
+    cfg = TwinConfig()
+    assert cfg.backend == "auto"
+    assert cfg.make_engine().backend in ("reference", "pallas")
+    assert len(SWEEP_TWIN.make_pool()) == 32
+
+
+def test_bursty_trace_modulates_arrivals():
+    from repro.cluster.workload import bursty_trace, poisson_trace
+    kw = dict(node_range=(1, 8), walltime_range=(30.0, 300.0), seed=0)
+    flat = poisson_trace(400, 16, 10.0, **kw)
+    burst = bursty_trace(400, 16, 10.0, period=600.0, amplitude=0.9, **kw)
+    assert len(burst) == 400
+    sub = np.array([j.submit_t for j in burst])
+    assert np.all(np.diff(sub) > 0)
+    # burstiness: dispersion of per-window arrival counts well above the
+    # flat trace's (nonhomogeneous Poisson -> overdispersed counts)
+    def dispersion(trace):
+        t = np.array([j.submit_t for j in trace])
+        counts, _ = np.histogram(t, bins=np.arange(0, t.max() + 300, 300))
+        return counts.var() / max(counts.mean(), 1e-9)
+    assert dispersion(burst) > 1.5 * dispersion(flat)
+    with pytest.raises(ValueError, match="amplitude"):
+        bursty_trace(10, 16, 10.0, amplitude=1.5, **kw)
+
+
+def test_bursty_trace_runs_through_emulator():
+    from repro.cluster.emulator import ClusterEmulator
+    from repro.cluster.workload import bursty_trace
+    trace = bursty_trace(20, 16, 6.0, (1, 8), (30.0, 200.0), seed=3,
+                         period=300.0, amplitude=0.8)
+    rep = ClusterEmulator(trace, 16, check_invariants=True).run(
+        policy_id=policies.FCFS)
+    assert rep.n_jobs == 20
