@@ -1,0 +1,171 @@
+"""Baseline sweep: the (scenario × policy) replay grid, batched vs serial.
+
+The paper's evaluation — and every continuous-revalidation workflow on
+top of it — reduces to replaying (trace, policy) combinations.  Before
+the replay engine (DESIGN.md §6) the only path was the host emulator's
+per-event loop, run serially once per scenario per policy: S·P Python
+event loops, each dispatching one k=1 engine pass per event.  The
+batched replay lifts the whole S×P grid into ONE device computation.
+
+This benchmark times both paths on the same grids (S ∈ {4, 8, 16}
+poisson scenarios × the 7-policy extended pool), asserts the results
+are bit-identical (a parity break exits nonzero), and emits a
+``BENCH_replay.json`` artifact.  The artifact is validated against
+``REQUIRED_KEYS`` after writing — CI runs ``--smoke`` and fails if
+any expected key is missing or parity is broken.
+
+CLI:
+    PYTHONPATH=src python benchmarks/baseline_sweep.py            # full
+    PYTHONPATH=src python benchmarks/baseline_sweep.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/baseline_sweep.py --sizes 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import numpy as np
+
+GRID_SIZES = (4, 8, 16)
+POOL_K = 7          # the extended static pool (ReplayGridConfig.pool)
+N_JOBS = 48
+N_JOBS_SMOKE = 16
+
+#: Keys the artifact must contain (checked after writing; missing keys
+#: are a hard failure so the benchmark cannot silently rot in CI).
+REQUIRED_KEYS = ("benchmark", "backend", "pool_k", "n_jobs", "grid")
+REQUIRED_GRID_KEYS = ("serial_s", "batched_s", "batched_first_s",
+                      "speedup", "parity_bitwise", "combos")
+
+
+def _grid_case(n_scenarios: int, n_jobs: int, seed: int):
+    from repro.configs.schedtwin import ReplayGridConfig
+    cfg = ReplayGridConfig(scenarios=n_scenarios, n_jobs=n_jobs,
+                           seed=seed, backend="reference")
+    traces = cfg.make_traces()
+    from repro.cluster.workload import stack_scenarios
+    return cfg, traces, stack_scenarios(traces, cfg.total_nodes)
+
+
+def bench_grid(n_scenarios: int, n_jobs: int, seed: int = 0,
+               repeats: int = 3) -> Dict[str, float | bool]:
+    """One S×P grid: serial host loops vs one batched replay."""
+    from repro.cluster.emulator import ClusterEmulator
+
+    cfg, traces, scen = _grid_case(n_scenarios, n_jobs, seed)
+    engine = cfg.make_engine()
+    pool = cfg.make_pool()      # P=7 extended statics by default
+
+    # -- serial: S*P host event loops (the pre-replay baseline path) ---
+    t0 = time.perf_counter()
+    reports = [[ClusterEmulator(tr, cfg.total_nodes,
+                                engine=engine).run(policy_id=pool.fork(p))
+                for p in range(len(pool))] for tr in traces]
+    serial_s = time.perf_counter() - t0
+
+    # -- batched: the whole grid in one device computation -------------
+    def grid():
+        out = engine.replay_grid(scen, pool.spec)
+        jax.block_until_ready(out.end_t)
+        return out
+
+    t0 = time.perf_counter()
+    out = grid()                    # includes compilation
+    first_s = time.perf_counter() - t0
+    batched_s = min(_timed(grid) for _ in range(repeats))
+
+    # -- parity: bit-identical to the host oracle ----------------------
+    start = np.asarray(out.start_t)
+    end = np.asarray(out.end_t)
+    parity = True
+    for s, per_policy in enumerate(reports):
+        n = len(traces[s])
+        for p, rep in enumerate(per_policy):
+            parity &= np.array_equal(start[s, p, :n],
+                                     rep.start_t.astype(np.float32))
+            parity &= np.array_equal(end[s, p, :n],
+                                     rep.end_t.astype(np.float32))
+    return {
+        "serial_s": serial_s,
+        "batched_s": batched_s,
+        "batched_first_s": first_s,
+        "speedup": serial_s / max(batched_s, 1e-9),
+        "parity_bitwise": bool(parity),
+        "combos": n_scenarios * len(pool),
+    }
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def validate_artifact(path: str) -> None:
+    """Fail loudly (SystemExit) if the artifact lost expected keys."""
+    with open(path) as f:
+        doc = json.load(f)
+    missing = [k for k in REQUIRED_KEYS if k not in doc]
+    for size, row in doc.get("grid", {}).items():
+        missing += [f"grid.{size}.{k}" for k in REQUIRED_GRID_KEYS
+                    if k not in row]
+    if missing:
+        raise SystemExit(
+            f"{path} is missing expected keys: {missing}")
+
+
+def main(sizes: Sequence[int] = GRID_SIZES, smoke: bool = False,
+         seed: int = 0, out: str = "BENCH_replay.json") -> List[str]:
+    n_jobs = N_JOBS_SMOKE if smoke else N_JOBS
+    repeats = 1 if smoke else 3
+    lines: List[str] = []
+    grid: Dict[str, Dict] = {}
+    for S in sizes:
+        row = bench_grid(S, n_jobs, seed=seed, repeats=repeats)
+        grid[str(S)] = row
+        if not row["parity_bitwise"]:
+            raise SystemExit(
+                f"replay/host parity broken at S={S}: batched grid is "
+                f"no longer bit-identical to the serial emulator loop")
+        lines.append(
+            f"baseline_sweep,S{S}xP{POOL_K},serial_s={row['serial_s']:.2f},"
+            f"batched_s={row['batched_s']:.3f},"
+            f"batched_first_s={row['batched_first_s']:.2f},"
+            f"speedup={row['speedup']:.1f}x,"
+            f"parity_bitwise={row['parity_bitwise']},"
+            f"combos={row['combos']}")
+    doc = {
+        "benchmark": "replay",
+        "backend": jax.default_backend(),
+        "engine": "reference",
+        "pool_k": POOL_K,
+        "n_jobs": n_jobs,
+        "smoke": smoke,
+        "grid": grid,
+    }
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    validate_artifact(out)
+    lines.append(f"baseline_sweep,artifact,path={out}")
+    return lines
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=None,
+                    help="scenario counts S (default: 4 8 16)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_replay.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: small traces, 1 repeat")
+    args = ap.parse_args()
+    for line in main(sizes=tuple(args.sizes or GRID_SIZES),
+                     smoke=args.smoke, seed=args.seed, out=args.out):
+        print(line)

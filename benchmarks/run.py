@@ -11,8 +11,9 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (bursty, figure1_jobdist, figure3_radar,
-                            overhead, roofline, table1_policy_dist)
+    from benchmarks import (baseline_sweep, bursty, figure1_jobdist,
+                            figure3_radar, overhead, roofline,
+                            table1_policy_dist)
     suite = {
         "figure1_jobdist": figure1_jobdist.main,
         "figure3_radar": figure3_radar.main,
@@ -20,6 +21,7 @@ def main() -> None:
         "overhead": overhead.main,
         "roofline": roofline.main,
         "bursty": bursty.main,
+        "baseline_sweep": baseline_sweep.main,
     }
     chosen = sys.argv[1:] or list(suite)
     t0 = time.perf_counter()

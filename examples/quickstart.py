@@ -6,19 +6,32 @@ the co-simulation, and prints the adaptive-vs-static comparison.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import numpy as np
+
 from repro.cluster import ClusterEmulator, paper_synthetic_trace
+from repro.cluster.workload import stack_scenarios
 from repro.core import EventBus, SchedTwin
-from repro.core.policies import FCFS, SJF, WFP, policy_name
+from repro.core.engine import DrainEngine
+from repro.core.policies import FCFS, SJF, WFP, parse_pool, policy_name
 from repro.core.scoring import radar_report
 
 trace = paper_synthetic_trace(seed=0)          # 150 jobs, 4 phases
 
 # --- static baselines (the schedulers the paper compares against) ----
+# fast=True replays the whole trace in ONE device computation
+# (bit-identical to the per-event host loop, DESIGN.md §6)
 per_policy = {}
 for pid in (FCFS, WFP, SJF):
     emulator = ClusterEmulator(trace, total_nodes=32)
-    report = emulator.run(policy_id=pid)
+    report = emulator.run(policy_id=pid, fast=True)
     per_policy[policy_name(pid)] = report.metric_dict()
+
+# --- a whole (scenario x policy) grid in one shot --------------------
+# S traces x the 7-policy pool: one batched replay, per-(s, p) metrics
+scenarios = stack_scenarios([paper_synthetic_trace(seed=s)
+                             for s in range(4)], total_nodes=32)
+grid = DrainEngine().replay_grid(scenarios, parse_pool("extended").spec)
+print("grid avg_wait (S=4 x P=7):\n", np.asarray(grid.metrics.avg_wait))
 
 # --- the twin: simulation-in-the-loop adaptive scheduling ------------
 # ``pool`` takes the sweep grammar (DESIGN.md §5): one what-if fork per

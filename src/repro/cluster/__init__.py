@@ -1,11 +1,13 @@
 """Physical-system side: PBS-like cluster emulator, workloads, failures."""
-from repro.cluster.workload import (JobSpec, bursty_trace,
-                                    paper_synthetic_trace, poisson_trace,
-                                    arch_job_mix, trace_to_arrays)
+from repro.cluster.workload import (JobSpec, ScenarioSet, bursty_trace,
+                                    make_scenario, paper_synthetic_trace,
+                                    poisson_trace, arch_job_mix,
+                                    stack_scenarios, trace_to_arrays)
 from repro.cluster.emulator import ClusterEmulator, RunReport
 
 __all__ = [
     "JobSpec", "paper_synthetic_trace", "poisson_trace", "bursty_trace",
     "arch_job_mix", "trace_to_arrays",
+    "ScenarioSet", "stack_scenarios", "make_scenario",
     "ClusterEmulator", "RunReport",
 ]

@@ -11,13 +11,24 @@ Two scheduler modes:
               (+ EASY backfill) through a k=1 ``DrainEngine`` pass —
               the *same* engine backend as the twin's simulator, so
               baseline semantics are bit-identical to the what-if
-              model under any backend;
+              model under any backend.  ``run(..., fast=True)`` lifts
+              the whole event loop onto the device via the engine's
+              batched replay (DESIGN.md §6) — same results bit-for-bit
+              (this host loop is kept as the oracle the replay engine
+              is parity-tested against), one device computation
+              instead of one engine pass per event;
   * twin    — scheduling authority is delegated: the emulator only
               starts jobs the twin selects via ``qrun``.
 
 Crucially, scheduling (both modes) reasons over *predicted* job ends
 (start + user estimate) while actual completions occur at the true
 runtime — the §3.2 pull-back/push-forward asymmetry.
+
+Job fields are quantized to f32 at ingestion (the device dtype): all
+event times are then sums of in-range f32 values, which f64 host
+arithmetic reproduces exactly, so host and device event loops stay
+bit-identical.  Failure times are NOT quantized — failures exist only
+on the host path.
 """
 from __future__ import annotations
 
@@ -86,6 +97,7 @@ class ClusterEmulator:
                  engine: Optional[DrainEngine] = None) -> None:
         self.trace = list(trace)
         self.bus = bus if bus is not None else EventBus()
+        self._external_bus = bus is not None
         self.engine = engine if engine is not None else DrainEngine()
         self.total_nodes = int(total_nodes)
         self.capacity_nodes = int(total_nodes)  # shrinks on failures
@@ -115,12 +127,17 @@ class ClusterEmulator:
         self._seq = 0
         self._end_seq = np.full(m, -1, dtype=np.int64)  # stale-end guards
 
+        # capacity timeline for utilization accounting: (time, capacity)
+        self._capacity_log: List[Tuple[float, int]] = [(0.0, int(total_nodes))]
+
         for spec in self.trace:
             if spec.nodes > total_nodes:
                 raise ValueError(
                     f"job {spec.job_id} requests {spec.nodes} > cluster "
                     f"{total_nodes} nodes")
-            self._push(spec.submit_t, _ARRIVAL, spec.job_id)
+            # arrival times quantized to f32 (see module docstring)
+            self._push(float(np.float32(spec.submit_t)), _ARRIVAL,
+                       spec.job_id)
         for i, f in enumerate(self.failures):
             self._push(f.time, _FAIL, i)
 
@@ -152,8 +169,12 @@ class ClusterEmulator:
         self.free_nodes -= int(self.nodes[j])
         run = self.remaining[j] if self.remaining[j] > 0 else self.true_rt[j]
         self._end_seq[j] = self._seq
-        self.end_t[j] = t + run
-        self._push(t + run, _END, j)
+        # end times quantize to f32 like every other event time: the
+        # f64 sum of f32-representable operands is exact, so the cast
+        # equals the device replay's f32 add bit-for-bit
+        end = float(np.float32(t + run))
+        self.end_t[j] = end
+        self._push(end, _END, j)
         self._publish(EventKind.RUNJOB, t, j)
 
     # ------------------------------------------------------------------
@@ -186,39 +207,63 @@ class ClusterEmulator:
     # ------------------------------------------------------------------
     def run(self,
             policy_id=None,
-            on_event: Optional[Callable[[], None]] = None) -> RunReport:
+            on_event: Optional[Callable[[], None]] = None,
+            fast: bool = False) -> RunReport:
         """Run the full trace.
 
         static mode: pass ``policy_id`` — a legacy integer id or a
         parametric ``policies.PolicySpec`` fork (e.g. ``wfp_spec(a=2)``
         to baseline one sweep point); both run through the same k=1
-        engine pass as the twin's simulator.
+        engine pass as the twin's simulator.  ``fast=True`` replays the
+        whole trace in ONE device computation (``engine.replay``,
+        DESIGN.md §6) — bit-identical results, no per-event engine
+        dispatch; the host event loop here remains the oracle.  The
+        fast path supports neither failures nor event-bus streaming.
         twin mode:   pass ``on_event`` = twin.pump (the co-simulation
         hook called after every published event).
         """
         if (policy_id is None) == (on_event is None):
             raise ValueError("exactly one of policy_id / on_event required")
+        if fast:
+            if policy_id is None:
+                raise ValueError("fast=True requires static mode")
+            if self.failures:
+                raise ValueError(
+                    "fast=True does not support failure scenarios; "
+                    "run the host event loop instead")
+            if self._external_bus or self.bus.has_listeners:
+                raise ValueError(
+                    "fast=True does not stream bus events, but this "
+                    "emulator has an attached bus (someone may consume "
+                    "it, even after the run); run the host event loop "
+                    "instead")
+            return self._run_fast(policy_id)
 
         while self._heap:
-            t, _, kind, ident = heapq.heappop(self._heap)
+            t, seq, kind, ident = heapq.heappop(self._heap)
             self.now = max(self.now, t)
             self.n_events += 1
 
             if kind == _ARRIVAL:
                 spec = self.trace[ident]
                 j = spec.job_id
-                self.submit_t[j] = spec.submit_t
+                self.submit_t[j] = np.float32(spec.submit_t)
                 self.nodes[j] = spec.nodes
-                self.est[j] = spec.est_runtime
-                self.true_rt[j] = spec.true_runtime
+                self.est[j] = np.float32(spec.est_runtime)
+                self.true_rt[j] = np.float32(spec.true_runtime)
                 self.state[j] = QUEUED
                 self._publish(EventKind.QUEUEJOB, t, j,
                               nodes=float(spec.nodes),
                               est_runtime=float(spec.est_runtime))
             elif kind == _END:
                 j = ident
-                # stale end events (job was killed/restarted) are skipped
-                if self.state[j] != RUNNING or t < self.end_t[j] - 1e-9:
+                # stale end events (the job was killed and restarted):
+                # each end event carries the sequence number of the run
+                # instance that pushed it, so a restart whose new end
+                # collides with the stale time cannot mis-retire (a
+                # float-epsilon time check here used to stand in for
+                # this and misfired on collisions).
+                if self.state[j] != RUNNING or seq != self._end_seq[j]:
                     self.n_events -= 1
                     continue
                 self.state[j] = DONE
@@ -232,6 +277,7 @@ class ClusterEmulator:
                 nodes = ident
                 self.capacity_nodes += nodes
                 self.free_nodes += nodes
+                self._capacity_log.append((t, self.capacity_nodes))
                 self._publish(EventKind.NODEUP, t, nodes=float(nodes))
             else:  # pragma: no cover
                 raise AssertionError(kind)
@@ -247,10 +293,40 @@ class ClusterEmulator:
         return self._report()
 
     # ------------------------------------------------------------------
+    def _run_fast(self, policy) -> RunReport:
+        """Static mode on the device: one batched replay instead of one
+        engine pass per host event.  Writes the replayed ground truth
+        back into the host arrays so ``_report`` (and any later
+        inspection) is identical to a host-loop run."""
+        from repro.cluster.workload import make_scenario
+
+        scen = make_scenario(self.trace, self.total_nodes,
+                             max_jobs=self.max_jobs)
+        out = self.engine.replay(scen, policy)
+        n = len(self.trace)
+        # f32 device times are exact in the f64 host arrays (ingestion
+        # quantizes to f32, and all sums stay in f32-exact range)
+        self.start_t[:] = np.asarray(out.start_t[0], dtype=np.float64)
+        self.end_t[:] = np.asarray(out.end_t[0], dtype=np.float64)
+        self.state[:] = np.asarray(out.result.state.jobs.state[0],
+                                   dtype=np.int64)
+        self.submit_t[:n] = scen.submit_t[0, :n]
+        self.nodes[:n] = scen.nodes[0, :n]
+        self.est[:n] = scen.est_runtime[0, :n]
+        self.true_rt[:n] = scen.true_runtime[0, :n]
+        self.free_nodes = self.total_nodes
+        if n:
+            self.now = float(self.end_t[:n].max())
+        # one arrival + one completion per job, as the host loop counts
+        self.n_events = 2 * n
+        return self._report()
+
+    # ------------------------------------------------------------------
     def _handle_failure(self, f: FailureSpec, t: float) -> None:
         """NODEFAIL: shrink capacity; kill+requeue victims if needed."""
         self.capacity_nodes -= f.nodes
         self.free_nodes -= f.nodes
+        self._capacity_log.append((t, self.capacity_nodes))
         victims: List[int] = []
         # free deficit -> kill running jobs (largest first = fewest kills)
         running = [int(j) for j in np.nonzero(self.state == RUNNING)[0]]
@@ -283,6 +359,23 @@ class ClusterEmulator:
         started = self.start_t >= 0
         assert np.all(self.start_t[started] >= self.submit_t[started] - 1e-9)
 
+    def _available_node_seconds(self, t0: float, t1: float) -> float:
+        """∫ capacity(t) dt over [t0, t1] along the failure timeline —
+        the utilization denominator.  Dividing by the original
+        ``total_nodes`` overstates availability whenever ``FailureSpec``s
+        shrink ``capacity_nodes`` (permanently for duration=0 failures).
+        Reduces to ``total_nodes * (t1 - t0)`` with no failures."""
+        if len(self._capacity_log) == 1:
+            return self.total_nodes * (t1 - t0)
+        total = 0.0
+        for i, (t_seg, cap) in enumerate(self._capacity_log):
+            t_next = (self._capacity_log[i + 1][0]
+                      if i + 1 < len(self._capacity_log) else t1)
+            lo, hi = max(t_seg, t0), min(t_next, t1)
+            if hi > lo:
+                total += cap * (hi - lo)
+        return total
+
     def _report(self) -> RunReport:
         done = self.state == DONE
         if not np.all(done[:len(self.trace)]):
@@ -294,8 +387,8 @@ class ClusterEmulator:
         wait = np.maximum(s - sub, 0.0)
         sd = np.maximum((wait + rt) / np.maximum(rt, SLOWDOWN_TAU), 1.0)
         makespan = float(e.max() - sub.min())
-        util = float((self.nodes[:n] * rt).sum()
-                     / (self.total_nodes * max(makespan, 1e-9)))
+        avail = self._available_node_seconds(float(sub.min()), float(e.max()))
+        util = float((self.nodes[:n] * rt).sum() / max(avail, 1e-9))
         return RunReport(
             start_t=s.copy(), end_t=e.copy(), submit_t=sub.copy(),
             nodes=self.nodes[:n].copy(), true_runtime=rt.copy(),

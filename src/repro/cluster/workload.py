@@ -22,7 +22,7 @@ real center logs (e.g. the Polaris-like distribution of Figure 1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -197,6 +197,106 @@ def arch_job_mix(n_jobs: int, total_pods: int = 32, seed: int = 0,
         jobs.append(JobSpec(jid, t, pods, est, max(1.0, est * acc),
                             tag=f"{arch}:{cname}"))
     return jobs
+
+
+# ----------------------------------------------------------------------
+# Scenario stacking — the replay engine's scenario axis (DESIGN.md §6).
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSet:
+    """S heterogeneous traces padded and stacked to one (S, J) block.
+
+    The device-side input of ``engine.replay`` / ``engine.replay_grid``:
+    slot j of scenario s is job j of trace s (submission order), padding
+    slots carry ``valid=False`` and an ``inf`` arrival so they never
+    enter any simulation.  ``total_nodes`` is per-scenario — scenarios
+    of different cluster sizes ride the same batch.
+
+    Job fields are quantized to f32 — the device dtype — so host-side
+    (f64) and device-side event arithmetic agree bit-for-bit (sums of
+    in-range f32 values are exact in both precisions).
+    """
+
+    submit_t: np.ndarray      # (S, J) f32, 0.0 on padding
+    nodes: np.ndarray         # (S, J) i32, 0 on padding
+    est_runtime: np.ndarray   # (S, J) f32, 0.0 on padding
+    true_runtime: np.ndarray  # (S, J) f32, 0.0 on padding
+    valid: np.ndarray         # (S, J) bool — real (non-padding) jobs
+    n_jobs: np.ndarray        # (S,) i32
+    total_nodes: np.ndarray   # (S,) i32
+
+    @property
+    def n_scenarios(self) -> int:
+        return self.submit_t.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.submit_t.shape[1]
+
+
+def stack_scenarios(traces: Sequence[Sequence[JobSpec]],
+                    total_nodes: Union[int, Sequence[int]],
+                    max_jobs: Optional[int] = None) -> ScenarioSet:
+    """Pad + stack traces into a ``ScenarioSet``.
+
+    ``max_jobs`` defaults to the next power of two above the longest
+    trace (matching ``ClusterEmulator``'s slot sizing; padding slots
+    never influence replay dynamics, so any J ≥ max trace length gives
+    identical results).  Traces must be in submission order — slot
+    index is the arrival cursor — and every job must fit its scenario's
+    cluster *or* the replay will flag that scenario deadlocked.
+    """
+    S = len(traces)
+    if S == 0:
+        raise ValueError("need at least one trace")
+    if isinstance(total_nodes, (int, np.integer)):
+        totals = [int(total_nodes)] * S
+    else:
+        totals = [int(t) for t in total_nodes]
+        if len(totals) != S:
+            raise ValueError(
+                f"{len(totals)} total_nodes for {S} traces")
+    longest = max(len(t) for t in traces)
+    if max_jobs is None:
+        max_jobs = max(64, 1 << int(np.ceil(np.log2(max(longest, 1) + 1))))
+    if longest > max_jobs:
+        raise ValueError(f"longest trace has {longest} jobs > {max_jobs}")
+
+    shape = (S, max_jobs)
+    out = ScenarioSet(
+        submit_t=np.zeros(shape, dtype=np.float32),
+        nodes=np.zeros(shape, dtype=np.int32),
+        est_runtime=np.zeros(shape, dtype=np.float32),
+        true_runtime=np.zeros(shape, dtype=np.float32),
+        valid=np.zeros(shape, dtype=bool),
+        n_jobs=np.asarray([len(t) for t in traces], dtype=np.int32),
+        total_nodes=np.asarray(totals, dtype=np.int32),
+    )
+    for s, trace in enumerate(traces):
+        ids = [j.job_id for j in trace]
+        if ids != list(range(len(trace))):
+            # slot j IS job j: the host emulator keys its arrays by
+            # job_id, the replay by position — permuted ids would make
+            # the two silently disagree
+            raise ValueError(
+                f"trace {s}: job_id must equal trace position")
+        sub = np.asarray([j.submit_t for j in trace], dtype=np.float32)
+        if np.any(np.diff(sub) < 0):
+            raise ValueError(f"trace {s} not in submission order")
+        n = len(trace)
+        out.submit_t[s, :n] = sub
+        out.nodes[s, :n] = [j.nodes for j in trace]
+        out.est_runtime[s, :n] = [j.est_runtime for j in trace]
+        out.true_runtime[s, :n] = [j.true_runtime for j in trace]
+        out.valid[s, :n] = True
+    return out
+
+
+def make_scenario(trace: Sequence[JobSpec], total_nodes: int,
+                  max_jobs: Optional[int] = None) -> ScenarioSet:
+    """One trace as an S=1 ``ScenarioSet`` (``engine.replay``'s input)."""
+    return stack_scenarios([trace], total_nodes, max_jobs=max_jobs)
 
 
 # ----------------------------------------------------------------------

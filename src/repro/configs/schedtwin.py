@@ -51,3 +51,61 @@ PAPER_TWIN = TwinConfig()
 EXTENDED_TWIN = TwinConfig(pool=tuple(EXTENDED_POOL))
 PALLAS_TWIN = TwinConfig(backend="pallas")
 SWEEP_TWIN = TwinConfig(pool=DRAS_SWEEP_POOL)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayGridConfig:
+    """A (scenario × policy) baseline grid for the replay engine
+    (DESIGN.md §6): S traces of one workload family × the candidate
+    pool, evaluated as ONE device computation
+    (``engine.replay_grid``).  Used by ``twin_loop --replay-grid`` and
+    ``benchmarks/baseline_sweep.py``."""
+
+    scenarios: int = 8
+    trace: str = "poisson"            # poisson | bursty | paper
+    n_jobs: int = 48
+    total_nodes: int = 32
+    mean_gap: float = 8.0
+    node_range: Tuple[int, int] = (1, 16)
+    walltime_range: Tuple[float, float] = (30.0, 900.0)
+    pool: Union[str, Tuple[int, ...]] = tuple(EXTENDED_POOL)   # P=7
+    seed: int = 0
+    backend: str = "auto"
+    interpret: Optional[bool] = None
+
+    def make_engine(self) -> DrainEngine:
+        return DrainEngine(backend=self.backend, interpret=self.interpret)
+
+    def make_pool(self) -> PolicyPool:
+        return normalize_pool(self.pool)
+
+    def make_traces(self):
+        """One trace per scenario: the same family, consecutive seeds —
+        the 'many what-if futures' axis."""
+        from repro.cluster.workload import (bursty_trace,
+                                            paper_synthetic_trace,
+                                            poisson_trace)
+        traces = []
+        for s in range(self.scenarios):
+            seed = self.seed + s
+            if self.trace == "paper":
+                traces.append(paper_synthetic_trace(seed=seed))
+            elif self.trace == "bursty":
+                traces.append(bursty_trace(
+                    self.n_jobs, self.total_nodes, self.mean_gap,
+                    self.node_range, self.walltime_range, seed=seed))
+            elif self.trace == "poisson":
+                traces.append(poisson_trace(
+                    self.n_jobs, self.total_nodes, self.mean_gap,
+                    self.node_range, self.walltime_range, seed=seed))
+            else:
+                raise ValueError(f"unknown trace family {self.trace!r}")
+        return traces
+
+    def make_scenarios(self):
+        """The stacked, padded ``workload.ScenarioSet``."""
+        from repro.cluster.workload import stack_scenarios
+        return stack_scenarios(self.make_traces(), self.total_nodes)
+
+
+REPLAY_GRID = ReplayGridConfig()

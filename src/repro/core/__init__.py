@@ -11,16 +11,18 @@ from repro.core.policies import (EXTENDED_POOL, FAM_EXP, FAM_LIN, FAM_WFP,
                                  static_spec, wfp_spec)
 from repro.core.backfill import (PassResult, priority_order, schedule_pass,
                                  schedule_pass_with_order)
-from repro.core.des import (DrainMetrics, DrainResult, broadcast_state,
-                            drain_metrics, simulate_to_drain,
-                            simulate_to_drain_batched)
+from repro.core.des import (DrainMetrics, DrainResult, ReplayResult,
+                            broadcast_state, drain_metrics,
+                            simulate_replay_batched, simulate_to_drain,
+                            simulate_to_drain_batched, state_metrics)
 from repro.core.scoring import (PAPER_WEIGHTS, ScoreWeights, policy_cost,
                                 radar_area, radar_normalize, radar_report,
                                 select_policy)
 from repro.core.engine import (DEFAULT_ENGINE, PASS_BACKENDS, DrainEngine,
-                               register_backend)
+                               ReplayOutcome, register_backend)
 from repro.core.whatif import (Decision, decide, decide_ensemble,
-                               decide_legacy_vmap, pool_array, sharded_whatif)
+                               decide_legacy_vmap, pool_array,
+                               sharded_replay_grid, sharded_whatif)
 from repro.core.twin import SchedTwin
 
 __all__ = [
@@ -37,10 +39,12 @@ __all__ = [
     "schedule_pass_with_order",
     "DrainResult", "DrainMetrics", "simulate_to_drain",
     "simulate_to_drain_batched", "broadcast_state", "drain_metrics",
+    "ReplayResult", "simulate_replay_batched", "state_metrics",
     "ScoreWeights", "PAPER_WEIGHTS", "policy_cost", "select_policy",
     "radar_area", "radar_normalize", "radar_report",
     "DrainEngine", "DEFAULT_ENGINE", "PASS_BACKENDS", "register_backend",
+    "ReplayOutcome",
     "Decision", "decide", "decide_ensemble", "decide_legacy_vmap",
-    "pool_array", "sharded_whatif",
+    "pool_array", "sharded_whatif", "sharded_replay_grid",
     "SchedTwin",
 ]

@@ -25,9 +25,20 @@ job-end events.  The loop bound is ``max_jobs + 1``: every iteration
 with a non-empty queue either starts jobs or retires at least one
 running job.
 
-The same engine also powers trace-replay mode (arrivals injected from a
-trace) used by the static-policy baselines in the benchmarks — see
-``repro/cluster/emulator.py`` which wraps it with ground-truth runtimes.
+* ``simulate_replay_batched`` — the drain generalized into an
+  event-driven **trace replay** (DESIGN.md §6): each fork additionally
+  carries a pending-arrival cursor into a per-fork arrival timeline and
+  a ground-truth runtime array.  Every step advances one fork-local
+  event — ``min(next arrival, next actual completion)`` — injecting
+  arrivals and retiring completions at their *true* end times while the
+  scheduling pass keeps reasoning over *predicted* ends
+  (start + estimate): the §3.2 pull-back/push-forward asymmetry that
+  previously only the host-side ``cluster/emulator.py`` loop modeled.
+  The three-stage keys/pass/advance decomposition and both pass
+  backends are reused unchanged, so an S-scenario × P-policy baseline
+  grid is ONE device computation (``engine.replay_grid``) instead of
+  S·P Python event loops, bit-identical to the host emulator's static
+  mode (tests/test_replay.py).
 """
 from __future__ import annotations
 
@@ -111,6 +122,25 @@ def broadcast_state(state: SimState, k: int) -> SimState:
         lambda x: jnp.broadcast_to(x, (k,) + jnp.shape(x)), state)
 
 
+def apply_starts(st: SimState, started: jax.Array) -> SimState:
+    """Apply a batched pass's start decisions (k, J): start at ``now``,
+    predicted end = now + estimate (§3.2), nodes claimed.  The single
+    copy of this parity-critical state evolution — shared by the drain
+    and replay loops so they cannot drift."""
+    jobs = st.jobs
+    now_col = st.now[:, None]
+    jobs = jobs._replace(
+        start_t=jnp.where(started, now_col, jobs.start_t),
+        end_t=jnp.where(started, now_col + jobs.est_runtime, jobs.end_t),
+        state=jnp.where(started, RUNNING, jobs.state),
+    )
+    return st._replace(
+        jobs=jobs,
+        free_nodes=st.free_nodes
+        - jnp.sum(jnp.where(started, jobs.nodes, 0), axis=1),
+    )
+
+
 def simulate_to_drain_batched(states: SimState, order_fn: Callable[[SimState], jax.Array],
                               pass_fn: BatchedPassFn) -> DrainResult:
     """Drain all k forks of ``states`` (leading batch axis on every
@@ -144,18 +174,7 @@ def simulate_to_drain_batched(states: SimState, order_fn: Callable[[SimState], j
         # ---- schedule pass on the whole batch ------------------------
         order = order_fn(st)                                # (k, J)
         started = pass_fn(st, order) & active[:, None]      # (k, J)
-        jobs = st.jobs
-        now_col = st.now[:, None]
-        jobs = jobs._replace(
-            start_t=jnp.where(started, now_col, jobs.start_t),
-            end_t=jnp.where(started, now_col + jobs.est_runtime, jobs.end_t),
-            state=jnp.where(started, RUNNING, jobs.state),
-        )
-        st = st._replace(
-            jobs=jobs,
-            free_nodes=st.free_nodes
-            - jnp.sum(jnp.where(started, jobs.nodes, 0), axis=1),
-        )
+        st = apply_starts(st, started)
         first = jnp.where(it == 0, started, first)
 
         # ---- advance each fork to its next predicted completion ------
@@ -187,6 +206,130 @@ def simulate_to_drain_batched(states: SimState, order_fn: Callable[[SimState], j
                        deadlocked=dead)
 
 
+# ----------------------------------------------------------------------
+# Scenario-vectorized trace replay (DESIGN.md §6).
+# ----------------------------------------------------------------------
+
+class ReplayResult(NamedTuple):
+    state: SimState          # final state: start_t/end_t are ACTUAL times
+    events: jax.Array        # i32 (k,) — events processed per fork
+    iters: jax.Array         # i32 scalar — lock-step iterations
+    deadlocked: jax.Array    # bool (k,) — a queued job can never run
+
+
+def simulate_replay_batched(states: SimState, arrival_t: jax.Array,
+                            true_rt: jax.Array,
+                            order_fn: Callable[[SimState], jax.Array],
+                            pass_fn: BatchedPassFn) -> ReplayResult:
+    """Replay k trace forks event-by-event in lock-step.
+
+    ``states`` is a batched ``SimState`` whose job table is *preloaded*
+    (submit_t/nodes/est_runtime filled for every slot) but entirely
+    INVALID: slots become visible to the scheduler only when their
+    arrival is injected.  ``arrival_t`` (k, J) is the per-fork arrival
+    timeline — non-decreasing along J, ``inf`` on padding slots — and
+    ``true_rt`` (k, J) the ground-truth runtimes the scheduler never
+    sees.
+
+    Each iteration processes exactly ONE event per live fork, mirroring
+    the host emulator's heap semantics bit-for-bit:
+
+      * the next event is ``min(next arrival, next actual end)``;
+        arrivals win ties (they were pushed first), simultaneous ends
+        retire in start order (push order of their end events);
+      * completions retire at ``start + true_rt`` — the *actual* end —
+        and overwrite the predicted ``end_t``, while running jobs keep
+        advertising ``start + est_runtime`` to the scheduling pass
+        (§3.2: the twin schedules against estimates; reality corrects);
+      * after the event, one scheduling pass runs on the whole batch
+        through the same ``order_fn``/``pass_fn`` stages as the drain.
+
+    A fork with no next event freezes: done if nothing is queued,
+    deadlocked if a queued job remains (its request exceeds that fork's
+    cluster) — other forks keep stepping either way.  The iteration
+    bound is 2·J + 2: every live iteration consumes one arrival or one
+    completion (≤ J of each), plus one iteration to flag deadlock.
+    """
+    k = states.now.shape[0]
+    max_jobs = states.jobs.capacity
+    max_iters = 2 * max_jobs + 2
+    slots = jnp.arange(max_jobs)
+    ord_none = jnp.iinfo(jnp.int32).max
+
+    def next_arrival(cursor):
+        cur = jnp.clip(cursor, 0, max_jobs - 1)
+        t = jnp.take_along_axis(arrival_t, cur[:, None], axis=1)[:, 0]
+        return jnp.where(cursor < max_jobs, t, jnp.inf), cur
+
+    def cond(carry):
+        st, cursor, true_end, start_ord, it, dead, events = carry
+        next_arr, _ = next_arrival(cursor)
+        jstate = st.jobs.state
+        work = (jnp.isfinite(next_arr)
+                | jnp.any(jstate == RUNNING, axis=1)
+                | jnp.any(jstate == QUEUED, axis=1))
+        return (it < max_iters) & jnp.any(work & ~dead)
+
+    def body(carry):
+        st, cursor, true_end, start_ord, it, dead, events = carry
+        jobs = st.jobs
+
+        # ---- pick each fork's next event -----------------------------
+        next_arr, cur = next_arrival(cursor)
+        running = jobs.state == RUNNING
+        te = jnp.where(running, true_end, jnp.inf)
+        next_end = jnp.min(te, axis=1)                       # (k,)
+        # among simultaneous actual ends, retire the earliest-started
+        # (the host heap pops end events in push == start order)
+        at_min = running & (te <= next_end[:, None])
+        j_end = jnp.argmin(jnp.where(at_min, start_ord, ord_none), axis=1)
+
+        is_arr = next_arr <= next_end        # equal times: arrival first
+        t_ev = jnp.minimum(next_arr, next_end)
+        has_event = jnp.isfinite(t_ev)
+        dead = dead | (~has_event & jnp.any(jobs.state == QUEUED, axis=1))
+        live = has_event & ~dead                             # (k,)
+
+        # ---- inject the arrival (slot = cursor) ----------------------
+        arr = live & is_arr
+        hit_arr = (slots[None, :] == cur[:, None]) & arr[:, None]
+        jstate = jnp.where(hit_arr, QUEUED, jobs.state)
+        cursor = cursor + arr.astype(jnp.int32)
+
+        # ---- retire the completion at its TRUE end time --------------
+        fin = live & ~is_arr
+        hit_end = (slots[None, :] == j_end[:, None]) & fin[:, None]
+        jstate = jnp.where(hit_end, DONE, jstate)
+        end_t = jnp.where(hit_end, true_end, jobs.end_t)
+        freed = jnp.sum(jnp.where(hit_end, jobs.nodes, 0), axis=1)
+        st = st._replace(
+            jobs=jobs._replace(state=jstate, end_t=end_t),
+            free_nodes=st.free_nodes + freed,
+            now=jnp.where(live, t_ev, st.now),
+        )
+
+        # ---- one scheduling pass on the whole batch ------------------
+        order = order_fn(st)
+        started = pass_fn(st, order) & live[:, None]
+        st = apply_starts(st, started)
+        true_end = jnp.where(started, st.now[:, None] + true_rt, true_end)
+        start_ord = jnp.where(started,
+                              it * (max_jobs + 1) + slots[None, :],
+                              start_ord)
+        return (st, cursor, true_end, start_ord, it + 1, dead,
+                events + live.astype(jnp.int32))
+
+    init = (states,
+            jnp.zeros((k,), dtype=jnp.int32),
+            jnp.full((k, max_jobs), jnp.inf, dtype=jnp.float32),
+            jnp.full((k, max_jobs), ord_none, dtype=jnp.int32),
+            jnp.int32(0),
+            jnp.zeros((k,), dtype=bool),
+            jnp.zeros((k,), dtype=jnp.int32))
+    st, _, _, _, it, dead, events = jax.lax.while_loop(cond, body, init)
+    return ReplayResult(state=st, events=events, iters=it, deadlocked=dead)
+
+
 class DrainMetrics(NamedTuple):
     avg_wait: jax.Array
     max_wait: jax.Array
@@ -207,7 +350,15 @@ def drain_metrics(result: DrainResult, eval_mask: jax.Array,
     ``runtime`` defaults to the estimate (all the twin knows); the
     emulator passes true runtimes when scoring *actual* outcomes.
     """
-    jobs = result.state.jobs
+    return state_metrics(result.state, eval_mask, runtime)
+
+
+def state_metrics(state: SimState, eval_mask: jax.Array,
+                  runtime: jax.Array | None = None) -> DrainMetrics:
+    """The same metrics over any final state — replay results score
+    with ``runtime`` = ground truth and ``eval_mask`` = the scenario's
+    real (non-padding) slots."""
+    jobs = state.jobs
     rt = jobs.est_runtime if runtime is None else runtime
     n = jnp.maximum(jnp.sum(eval_mask), 1)
 
@@ -221,7 +372,7 @@ def drain_metrics(result: DrainResult, eval_mask: jax.Array,
     node_seconds = jnp.sum(jnp.where(eval_mask, jobs.nodes * rt, 0.0))
     span = jnp.maximum(
         makespan - jnp.min(jnp.where(eval_mask, jobs.submit_t, jnp.inf)), 1e-6)
-    util = node_seconds / (result.state.total_nodes.astype(jnp.float32) * span)
+    util = node_seconds / (state.total_nodes.astype(jnp.float32) * span)
 
     return DrainMetrics(
         avg_wait=jnp.sum(wait) / n,

@@ -35,6 +35,13 @@ k * n_ens forks in one drain), ``whatif.sharded_whatif`` (shards the
 fork axis), ``SchedTwin`` (engine injected at construction) and the
 cluster emulator's static mode (a k=1 engine, so baselines stay
 bit-identical to the twin's simulator).
+
+The engine also hosts the **scenario-vectorized replay** (DESIGN.md
+§6): ``replay`` / ``replay_grid`` drive ``des.simulate_replay_batched``
+over a ``workload.ScenarioSet``, stacking an S-scenario axis on top of
+the P-policy fork axis (flat fork f = s·P + p) — a whole baseline grid
+in one device computation, bit-identical to the host emulator's event
+loop, sharded by scenario via ``whatif.sharded_replay_grid``.
 """
 from __future__ import annotations
 
@@ -48,10 +55,13 @@ import jax.numpy as jnp
 
 from repro.core import scoring
 from repro.core.backfill import priority_order, schedule_pass_with_order
-from repro.core.des import (DrainMetrics, DrainResult, broadcast_state,
-                            drain_metrics, simulate_to_drain_batched)
+from repro.core.des import (DrainMetrics, DrainResult, ReplayResult,
+                            broadcast_state, drain_metrics,
+                            simulate_replay_batched,
+                            simulate_to_drain_batched, state_metrics)
 from repro.core.policies import PolicySpec
-from repro.core.state import QUEUED, RUNNING, SimState
+from repro.core.state import (QUEUED, RUNNING, TIME_NONE, JobTable,
+                              SimState)
 from repro.kernels import policy_eval as _pe
 
 logger = logging.getLogger(__name__)
@@ -70,11 +80,24 @@ def pool_size(pool: EnginePool) -> int:
 
 
 def tile_pool(pool: EnginePool, n: int) -> EnginePool:
-    """Repeat a pool n times along the fork axis (ensemble stacking)."""
+    """Repeat a pool n times along the fork axis (ensemble stacking /
+    one pool copy per replay scenario)."""
     if isinstance(pool, PolicySpec):
         return PolicySpec(jnp.tile(pool.family, n),
                           jnp.tile(pool.theta, (n, 1)))
     return jnp.tile(pool, n)
+
+
+def as_pool(policy) -> EnginePool:
+    """Lift a single policy — a ``PolicySpec`` fork or a legacy integer
+    id — into a k=1 pool (pools pass through unchanged)."""
+    if isinstance(policy, PolicySpec):
+        if policy.family.ndim == 0:
+            return PolicySpec(policy.family.reshape(1),
+                              policy.theta.reshape(1, -1))
+        return policy
+    arr = jnp.asarray(policy, jnp.int32)
+    return arr.reshape(1) if arr.ndim == 0 else arr
 
 
 class Decision(NamedTuple):
@@ -84,6 +107,23 @@ class Decision(NamedTuple):
     run_mask: jax.Array       # bool (max_jobs,) jobs to start now (qrun set)
     metrics: DrainMetrics     # (k,)-leading metrics for telemetry
     deadlocked: jax.Array     # (k,) bool
+
+
+class ReplayOutcome(NamedTuple):
+    """A replayed (scenario × policy) grid (DESIGN.md §6).
+
+    Leading axes are (S, P) from ``replay_grid`` — flat fork f = s·P + p
+    — and (P,) from ``replay`` (S squeezed).  ``start_t``/``end_t`` are
+    ACTUAL times (completions retire at ground-truth ends); ``metrics``
+    score true outcomes (runtime = ground truth) over each scenario's
+    real slots, per-scenario ``total_nodes`` included.
+    """
+    start_t: jax.Array        # f32 (..., J)
+    end_t: jax.Array          # f32 (..., J)
+    metrics: DrainMetrics     # (...)-leading
+    deadlocked: jax.Array     # bool (...)
+    events: jax.Array         # i32 (...) — events processed per fork
+    result: ReplayResult      # the raw flat (k = S·P) replay result
 
 
 # ----------------------------------------------------------------------
@@ -216,12 +256,28 @@ class DrainEngine:
     def schedule_pass_starts(self, state: SimState, policy) -> jax.Array:
         """Started mask (J,) for ONE policy (``PolicySpec`` fork or
         legacy integer id) on an unbatched state."""
-        if isinstance(policy, PolicySpec):
-            pool = PolicySpec(policy.family.reshape(1),
-                              policy.theta.reshape(1, -1))
-        else:
-            pool = jnp.asarray(policy, jnp.int32).reshape(1)
-        return _single_pass(self, state, pool)
+        return _single_pass(self, state, as_pool(policy))
+
+    # -- trace replay (DESIGN.md §6) -----------------------------------
+    def replay(self, scenario, pool) -> ReplayOutcome:
+        """Replay ONE scenario (an S=1 ``workload.ScenarioSet``) under
+        every fork of ``pool`` — (P,)-leading outcome.  Bit-identical
+        to P host-emulator static-mode runs (tests/test_replay.py)."""
+        S = int(scenario.total_nodes.shape[0])
+        if S != 1:
+            raise ValueError(
+                f"replay takes one scenario (got {S}); use replay_grid")
+        pool = as_pool(pool)
+        res, metrics = _replay(self, *replay_inputs(scenario, pool))
+        return _shape_outcome(res, metrics, (pool_size(pool),))
+
+    def replay_grid(self, scenarios, pool) -> ReplayOutcome:
+        """Evaluate the full (scenario × policy) grid — S·P forks, ONE
+        device computation.  Fork f = s·P + p; outcome axes (S, P)."""
+        pool = as_pool(pool)
+        S = int(scenarios.total_nodes.shape[0])
+        res, metrics = _replay(self, *replay_inputs(scenarios, pool))
+        return _shape_outcome(res, metrics, (S, pool_size(pool)))
 
 
 # ----------------------------------------------------------------------
@@ -306,6 +362,70 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
         run_mask=res.first_started.reshape(n_ens, k, cap)[0, best],
         metrics=mean_metrics,
         deadlocked=dead,
+    )
+
+
+# ----------------------------------------------------------------------
+# Scenario-vectorized replay (DESIGN.md §6).
+# ----------------------------------------------------------------------
+
+def replay_inputs(scenarios, pool: EnginePool):
+    """Device inputs for the flat (k = S·P) replay batch from a
+    ``workload.ScenarioSet``-shaped object: scenario rows repeat P times
+    (fork f = s·P + p), the pool tiles once per scenario, and the job
+    table is preloaded but fully INVALID — arrivals inject slots as the
+    replay reaches them.  Shared by ``DrainEngine.replay_grid`` and
+    ``whatif.sharded_replay_grid`` (which shards the leading axis)."""
+    P = pool_size(pool)
+    rep = lambda x, dt: jnp.repeat(jnp.asarray(x, dtype=dt), P, axis=0)
+    submit = rep(scenarios.submit_t, jnp.float32)           # (S*P, J)
+    valid = rep(scenarios.valid, bool)
+    k, J = submit.shape
+    none = jnp.full((k, J), TIME_NONE, dtype=jnp.float32)
+    jobs = JobTable(
+        submit_t=submit,
+        nodes=rep(scenarios.nodes, jnp.int32),
+        est_runtime=rep(scenarios.est_runtime, jnp.float32),
+        start_t=none,
+        end_t=none,
+        state=jnp.zeros((k, J), dtype=jnp.int32),           # INVALID
+    )
+    total = rep(scenarios.total_nodes, jnp.int32)           # (S*P,)
+    states = SimState(jobs=jobs, free_nodes=total, total_nodes=total,
+                      now=jnp.zeros((k,), dtype=jnp.float32))
+    arrival_t = jnp.where(valid, submit, jnp.inf)
+    true_rt = rep(scenarios.true_runtime, jnp.float32)
+    S = int(scenarios.total_nodes.shape[0])
+    return states, arrival_t, true_rt, tile_pool(pool, S), valid
+
+
+def _replay_impl(engine: DrainEngine, states: SimState,
+                 arrival_t: jax.Array, true_rt: jax.Array,
+                 pool: EnginePool, valid: jax.Array):
+    res = simulate_replay_batched(
+        states, arrival_t, true_rt,
+        lambda st: batched_priority_order(st, pool),
+        engine.pass_fn())
+    metrics = jax.vmap(state_metrics)(res.state, valid, true_rt)
+    return res, metrics
+
+
+@functools.partial(jax.jit, static_argnames=("engine",))
+def _replay(engine: DrainEngine, states: SimState, arrival_t: jax.Array,
+            true_rt: jax.Array, pool: EnginePool, valid: jax.Array):
+    return _replay_impl(engine, states, arrival_t, true_rt, pool, valid)
+
+
+def _shape_outcome(res: ReplayResult, metrics: DrainMetrics,
+                   shape) -> ReplayOutcome:
+    rs = lambda x: x.reshape(shape + x.shape[1:])
+    return ReplayOutcome(
+        start_t=rs(res.state.jobs.start_t),
+        end_t=rs(res.state.jobs.end_t),
+        metrics=jax.tree.map(rs, metrics),
+        deadlocked=rs(res.deadlocked),
+        events=rs(res.events),
+        result=res,
     )
 
 

@@ -85,6 +85,13 @@ class EventBus:
         """Push-mode delivery (used by the co-simulation loop)."""
         self._subscribers.append(callback)
 
+    @property
+    def has_listeners(self) -> bool:
+        """Anyone push-subscribed or pull-reading this bus — producers
+        that cannot stream (the emulator's ``fast=True`` replay) must
+        refuse rather than silently starve them."""
+        return bool(self._subscribers) or bool(self._offsets)
+
     def replay(self) -> Iterator[Event]:
         """Full-log replay (recovery after a twin restart)."""
         return iter(list(self._log))

@@ -354,6 +354,11 @@ class PolicyPool:
                 jnp.concatenate([self.spec.theta, other.spec.theta])),
             names=self.names + other.names)
 
+    def fork(self, p: int) -> PolicySpec:
+        """Fork p as a scalar ``PolicySpec`` — e.g. to baseline one
+        pool member through the emulator's static mode."""
+        return PolicySpec(self.spec.family[p], self.spec.theta[p])
+
     @classmethod
     def from_ids(cls, ids: Sequence[int]) -> "PolicyPool":
         """Static fixed points for a legacy id pool (caller's order =

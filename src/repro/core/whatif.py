@@ -45,7 +45,8 @@ from repro.core.state import QUEUED, SimState
 
 __all__ = [
     "Decision", "PolicyPool", "decide", "decide_ensemble",
-    "decide_legacy_vmap", "sharded_whatif", "paper_pool", "pool_array",
+    "decide_legacy_vmap", "sharded_whatif", "sharded_replay_grid",
+    "paper_pool", "pool_array",
 ]
 
 #: Anything the public decide functions take as a pool.
@@ -157,6 +158,47 @@ def sharded_whatif(mesh: Mesh, axis: str = "data",
 
     def wrapper(state: SimState, pool: PoolArg) -> Decision:
         return decide_sharded(state, _engine_pool(pool))
+
+    return wrapper
+
+
+def sharded_replay_grid(mesh: Mesh, axis: str = "data",
+                        engine: Optional[DrainEngine] = None):
+    """Fleet-scale replay: the SCENARIO axis of ``engine.replay_grid``
+    sharded over ``axis`` of ``mesh`` (DESIGN.md §6).
+
+    The flat fork axis is f = s·P + p, so sharding the leading axis of
+    every input by blocks keeps each scenario's P policy forks on one
+    device — scenarios are the unit of partition, the natural layout
+    for multi-host what-if farms (each host replays its own futures).
+    Requires the scenario count S to be divisible by the axis size.
+
+    Returns a function ``(scenarios: workload.ScenarioSet, pool) ->
+    ReplayOutcome`` with the same semantics as ``replay_grid``.
+    """
+    from repro.core.engine import (_replay_impl, _shape_outcome, as_pool,
+                                   pool_size, replay_inputs)
+
+    eng = engine or DEFAULT_ENGINE
+    sharded = NamedSharding(mesh, P(axis))
+    replicated = NamedSharding(mesh, P())
+    n_shards = mesh.shape[axis]
+
+    @functools.partial(jax.jit,
+                       in_shardings=(sharded,) * 5,
+                       out_shardings=replicated)
+    def run(states, arrival_t, true_rt, pool, valid):
+        return _replay_impl(eng, states, arrival_t, true_rt, pool, valid)
+
+    def wrapper(scenarios, pool: PoolArg):
+        pool = as_pool(_engine_pool(pool))
+        S = int(scenarios.total_nodes.shape[0])
+        if S % n_shards:
+            raise ValueError(
+                f"S={S} scenarios not divisible by {n_shards}-way "
+                f"'{axis}' axis")
+        res, metrics = run(*replay_inputs(scenarios, pool))
+        return _shape_outcome(res, metrics, (S, pool_size(pool)))
 
     return wrapper
 

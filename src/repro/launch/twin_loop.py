@@ -5,6 +5,12 @@
     python -m repro.launch.twin_loop --failures 2     # fault injection
     python -m repro.launch.twin_loop --backend pallas # kernel what-ifs
     python -m repro.launch.twin_loop --trace bursty   # diurnal arrivals
+    python -m repro.launch.twin_loop --replay-grid 8  # S x P baseline grid
+
+``--replay-grid S`` skips the co-simulation and instead evaluates the
+full (S scenarios × pool) baseline grid in ONE batched device replay
+(``engine.replay_grid``, DESIGN.md §6), printing per-policy metrics
+aggregated over scenarios.
 
 ``--pool`` takes the sweep grammar (``repro.core.policies.parse_pool``):
 one fork per grid point, e.g. a DRAS-style 25-point parameter sweep
@@ -28,6 +34,37 @@ from repro.core.policies import parse_pool
 from repro.core.twin import SchedTwin
 
 
+def replay_grid(args, engine: DrainEngine) -> None:
+    """--replay-grid: the S × P baseline grid as ONE device replay."""
+    import time
+
+    from repro.configs.schedtwin import ReplayGridConfig
+
+    cfg = ReplayGridConfig(scenarios=args.replay_grid, trace=args.trace,
+                           n_jobs=args.jobs, total_nodes=args.nodes,
+                           pool=args.pool, seed=args.seed,
+                           backend=engine.backend)
+    pool = cfg.make_pool()
+    scen = cfg.make_scenarios()
+    t0 = time.perf_counter()
+    out = engine.replay_grid(scen, pool.spec)
+    np.asarray(out.end_t)  # block
+    wall = time.perf_counter() - t0
+    S, P = out.deadlocked.shape
+    print(f"replay grid: S={S} scenarios x P={P} policies "
+          f"({S * P} forks, one device computation) in {wall:.2f}s")
+    print(f"{'policy':>16s} {'avg_wait':>9s} {'max_wait':>9s} "
+          f"{'avg_sd':>7s} {'util':>6s} {'dead':>5s}")
+    m = out.metrics
+    for p, name in enumerate(pool.names):
+        print(f"{name:>16s} "
+              f"{float(np.mean(np.asarray(m.avg_wait)[:, p])):9.1f} "
+              f"{float(np.mean(np.asarray(m.max_wait)[:, p])):9.1f} "
+              f"{float(np.mean(np.asarray(m.avg_slowdown)[:, p])):7.2f} "
+              f"{float(np.mean(np.asarray(m.utilization)[:, p])):6.3f} "
+              f"{int(np.asarray(out.deadlocked)[:, p].sum()):5d}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", choices=("paper", "poisson", "bursty"),
@@ -47,12 +84,23 @@ def main() -> None:
                     help="scheduling-pass backend for the what-if engine "
                          "(auto: reference on CPU, pallas on TPU)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replay-grid", type=int, default=0, metavar="S",
+                    help="evaluate an S-scenario x pool baseline grid in "
+                         "one batched replay instead of running the "
+                         "twin co-simulation")
     args = ap.parse_args()
+    if args.replay_grid and (args.failures or args.ensemble > 1):
+        ap.error("--replay-grid evaluates static baselines; --failures "
+                 "and --ensemble do not apply (run the co-simulation "
+                 "for those)")
     engine = DrainEngine(backend=args.backend)
     pool = parse_pool(args.pool)
     print(f"pool: k={len(pool)} forks "
           f"[{', '.join(pool.names[:8])}{', ...' if len(pool) > 8 else ''}] "
           f"backend={engine.backend}")
+
+    if args.replay_grid:
+        return replay_grid(args, engine)
 
     if args.trace == "paper":
         trace = paper_synthetic_trace(seed=args.seed)

@@ -1,0 +1,238 @@
+"""Replay-engine parity: the batched device replay (DESIGN.md §6)
+against the host emulator's static mode, which is kept as the
+bit-exact oracle.
+
+The acceptance contract: ``engine.replay`` start/end times are
+bit-identical to the host event loop over ≥ 40 random (trace, policy)
+combinations under BOTH pass backends, and per-scenario metrics agree
+exactly (the emulator's ``fast=True`` path runs the same numpy report
+code over the replayed arrays).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.emulator import ClusterEmulator
+from repro.cluster.workload import (JobSpec, bursty_trace, make_scenario,
+                                    poisson_trace, stack_scenarios)
+from repro.core.engine import DrainEngine
+from repro.core.policies import EXTENDED_POOL, FCFS, WFP, parse_pool
+from repro.core.state import DONE, QUEUED
+
+REF = DrainEngine("reference")
+PAL = DrainEngine("pallas")       # interpret-mode on CPU
+POOL = jnp.asarray(EXTENDED_POOL, dtype=jnp.int32)
+MAX_JOBS = 64
+
+
+def random_traces(n_traces: int, n_jobs: int = 20, total_nodes: int = 16):
+    """A mix of poisson and bursty traces across seeds/params."""
+    out = []
+    for i in range(n_traces):
+        gen = bursty_trace if i % 2 else poisson_trace
+        out.append(gen(n_jobs, total_nodes, 4.0 + i, (1, total_nodes - 4),
+                       (30.0, 400.0), seed=100 + i))
+    return out
+
+
+def assert_replay_matches_host(trace, total_nodes, engine,
+                               pool_ids=EXTENDED_POOL):
+    """One trace x every pool policy: device replay vs host loop."""
+    scen = make_scenario(trace, total_nodes, max_jobs=MAX_JOBS)
+    out = engine.replay(scen, jnp.asarray(pool_ids, dtype=jnp.int32))
+    n = len(trace)
+    start = np.asarray(out.start_t)
+    end = np.asarray(out.end_t)
+    for p, pid in enumerate(pool_ids):
+        em = ClusterEmulator(trace, total_nodes, engine=engine,
+                             max_jobs=MAX_JOBS)
+        rep = em.run(policy_id=pid)
+        np.testing.assert_array_equal(
+            start[p, :n], rep.start_t.astype(np.float32),
+            err_msg=f"start_t mismatch, policy {pid}")
+        np.testing.assert_array_equal(
+            end[p, :n], rep.end_t.astype(np.float32),
+            err_msg=f"end_t mismatch, policy {pid}")
+        # per-scenario metrics to the bit: the fast path runs the SAME
+        # numpy report over the replayed arrays
+        fast = ClusterEmulator(trace, total_nodes, engine=engine,
+                               max_jobs=MAX_JOBS).run(policy_id=pid,
+                                                      fast=True)
+        assert fast.metric_dict() == rep.metric_dict(), f"policy {pid}"
+    assert not np.asarray(out.deadlocked).any()
+
+
+@pytest.mark.parametrize("engine", [REF, PAL], ids=["reference", "pallas"])
+def test_replay_parity_40_combos(engine):
+    """6 random traces x 7 policies = 42 bit-identical combinations."""
+    for trace in random_traces(6):
+        assert_replay_matches_host(trace, 16, engine)
+
+
+@pytest.mark.parametrize("engine", [REF, PAL], ids=["reference", "pallas"])
+def test_fast_path_report_parity(engine):
+    """run(fast=True) == the host event loop: arrays AND metrics, to
+    the bit (both paths share the numpy report code)."""
+    trace = poisson_trace(24, 16, 6.0, (1, 12), (30.0, 300.0), seed=7)
+    for pid in (WFP, FCFS):
+        a = ClusterEmulator(trace, 16, engine=engine).run(policy_id=pid)
+        b = ClusterEmulator(trace, 16, engine=engine).run(policy_id=pid,
+                                                         fast=True)
+        np.testing.assert_array_equal(a.start_t, b.start_t)
+        np.testing.assert_array_equal(a.end_t, b.end_t)
+        assert a.metric_dict() == b.metric_dict()
+        assert a.n_events == b.n_events
+
+
+def test_fast_path_rejects_failures_and_twin_mode():
+    from repro.cluster.emulator import FailureSpec
+    trace = poisson_trace(8, 16, 6.0, (1, 8), (30.0, 120.0), seed=1)
+    em = ClusterEmulator(trace, 16,
+                         failures=[FailureSpec(50.0, 4, 100.0)])
+    with pytest.raises(ValueError, match="failure"):
+        em.run(policy_id=WFP, fast=True)
+    with pytest.raises(ValueError):
+        ClusterEmulator(trace, 16).run(on_event=lambda: None, fast=True)
+    # fast mode publishes no events: refuse rather than starve anyone
+    # observing the bus (even a consumer that only reads after the run)
+    from repro.core.events import EventBus
+    with pytest.raises(ValueError, match="stream bus events"):
+        ClusterEmulator(trace, 16, bus=EventBus()).run(policy_id=WFP,
+                                                       fast=True)
+
+
+def test_replay_grid_matches_single_replays():
+    """The S x P grid is bit-for-bit the stack of per-scenario replays
+    — heterogeneous lengths and per-scenario cluster sizes included."""
+    traces = [
+        poisson_trace(20, 16, 5.0, (1, 12), (30.0, 300.0), seed=0),
+        poisson_trace(14, 24, 7.0, (1, 16), (60.0, 600.0), seed=1),
+        bursty_trace(26, 32, 4.0, (1, 20), (30.0, 400.0), seed=2),
+    ]
+    totals = [16, 24, 32]
+    scen = stack_scenarios(traces, totals, max_jobs=MAX_JOBS)
+    grid = REF.replay_grid(scen, POOL)
+    assert grid.start_t.shape == (3, len(EXTENDED_POOL), MAX_JOBS)
+    for s, (trace, tn) in enumerate(zip(traces, totals)):
+        single = REF.replay(make_scenario(trace, tn, max_jobs=MAX_JOBS),
+                            POOL)
+        np.testing.assert_array_equal(np.asarray(grid.start_t[s]),
+                                      np.asarray(single.start_t))
+        np.testing.assert_array_equal(np.asarray(grid.end_t[s]),
+                                      np.asarray(single.end_t))
+        np.testing.assert_array_equal(np.asarray(grid.events[s]),
+                                      np.asarray(single.events))
+    # per-scenario metrics use per-scenario total_nodes
+    util = np.asarray(grid.metrics.utilization)
+    assert util.shape == (3, len(EXTENDED_POOL))
+    assert np.all(util > 0) and np.all(util <= 1)
+
+
+def test_replay_padding_invariant():
+    """Padding slots never influence dynamics: J=64 == J=128."""
+    trace = poisson_trace(16, 16, 5.0, (1, 12), (30.0, 300.0), seed=9)
+    a = REF.replay(make_scenario(trace, 16, max_jobs=64), POOL)
+    b = REF.replay(make_scenario(trace, 16, max_jobs=128), POOL)
+    n = len(trace)
+    np.testing.assert_array_equal(np.asarray(a.start_t)[:, :n],
+                                  np.asarray(b.start_t)[:, :n])
+    np.testing.assert_array_equal(np.asarray(a.end_t)[:, :n],
+                                  np.asarray(b.end_t)[:, :n])
+
+
+def test_deadlock_freezes_only_its_scenario():
+    """A job requesting more than its scenario's cluster deadlocks that
+    scenario (flagged, frozen) while every other fork completes — the
+    host emulator refuses such traces outright."""
+    good = poisson_trace(12, 16, 5.0, (1, 12), (30.0, 200.0), seed=3)
+    bad = [JobSpec(0, 0.0, 4, 60.0, 50.0, "ok"),
+           JobSpec(1, 5.0, 64, 60.0, 50.0, "too-big"),   # > 16 nodes
+           JobSpec(2, 10.0, 4, 60.0, 50.0, "ok")]
+    scen = stack_scenarios([good, bad], 16, max_jobs=32)
+    grid = REF.replay_grid(scen, POOL)
+    dead = np.asarray(grid.deadlocked)
+    assert not dead[0].any()
+    assert dead[1].all()
+    # the poisoned scenario still runs its feasible jobs to completion
+    jstate = np.asarray(grid.result.state.jobs.state).reshape(
+        2, len(EXTENDED_POOL), 32)
+    assert (jstate[1, :, [0, 2]] == DONE).all()
+    assert (jstate[1, :, 1] == QUEUED).all()
+    # ... and the good scenario is bit-identical to a solo replay
+    solo = REF.replay(make_scenario(good, 16, max_jobs=32), POOL)
+    np.testing.assert_array_equal(np.asarray(grid.start_t[0]),
+                                  np.asarray(solo.start_t))
+
+
+def test_sharded_replay_grid(mesh11):
+    from repro.core import whatif
+    run = whatif.sharded_replay_grid(mesh11)
+    traces = random_traces(2, n_jobs=12)
+    scen = stack_scenarios(traces, 16, max_jobs=32)
+    pool = parse_pool("extended")
+    sharded = run(scen, pool)
+    local = REF.replay_grid(scen, pool.spec)
+    np.testing.assert_array_equal(np.asarray(sharded.start_t),
+                                  np.asarray(local.start_t))
+    np.testing.assert_array_equal(np.asarray(sharded.end_t),
+                                  np.asarray(local.end_t))
+    np.testing.assert_array_equal(np.asarray(sharded.deadlocked),
+                                  np.asarray(local.deadlocked))
+
+
+def test_stack_scenarios_validates():
+    t = [JobSpec(0, 10.0, 1, 30.0, 20.0, ""),
+         JobSpec(1, 5.0, 1, 30.0, 20.0, "")]      # out of order
+    with pytest.raises(ValueError, match="submission order"):
+        stack_scenarios([t], 16)
+    perm = [JobSpec(1, 0.0, 1, 30.0, 20.0, ""),   # job_id != position:
+            JobSpec(0, 0.0, 1, 30.0, 20.0, "")]   # host keys by id,
+    with pytest.raises(ValueError, match="job_id"):  # replay by slot
+        stack_scenarios([perm], 16)
+    with pytest.raises(ValueError, match="total_nodes"):
+        stack_scenarios([t[:1]], [16, 32])
+    with pytest.raises(ValueError, match="at least one"):
+        stack_scenarios([], 16)
+
+
+def test_replay_single_scenario_only():
+    traces = random_traces(2, n_jobs=6)
+    scen = stack_scenarios(traces, 16, max_jobs=32)
+    with pytest.raises(ValueError, match="replay_grid"):
+        REF.replay(scen, POOL)
+
+
+# ----------------------------------------------------------------------
+# Property-based parity over random traces (hypothesis optional).
+# ----------------------------------------------------------------------
+
+def _hypothesis_parity():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           n_jobs=st.integers(4, 14),
+           total_nodes=st.sampled_from([8, 16, 24]),
+           policy=st.sampled_from(list(EXTENDED_POOL)))
+    def inner(seed, n_jobs, total_nodes, policy):
+        trace = poisson_trace(n_jobs, total_nodes, 5.0,
+                              (1, max(2, total_nodes - 2)),
+                              (10.0, 300.0), seed=seed,
+                              accuracy=(0.2, 1.2))
+        scen = make_scenario(trace, total_nodes, max_jobs=32)
+        out = REF.replay(scen, jnp.asarray([policy], dtype=jnp.int32))
+        rep = ClusterEmulator(trace, total_nodes, engine=REF,
+                              max_jobs=32).run(policy_id=policy)
+        np.testing.assert_array_equal(
+            np.asarray(out.start_t)[0, :n_jobs],
+            rep.start_t.astype(np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(out.end_t)[0, :n_jobs],
+            rep.end_t.astype(np.float32))
+
+    return inner
+
+
+def test_replay_parity_property():
+    _hypothesis_parity()()
