@@ -9,10 +9,17 @@ batched replay lifts the whole S×P grid into ONE device computation.
 
 This benchmark times both paths on the same grids (S ∈ {4, 8, 16}
 poisson scenarios × the 7-policy extended pool), asserts the results
-are bit-identical (a parity break exits nonzero), and emits a
-``BENCH_replay.json`` artifact.  The artifact is validated against
-``REQUIRED_KEYS`` after writing — CI runs ``--smoke`` and fails if
-any expected key is missing or parity is broken.
+are bit-identical (a parity break exits nonzero) AND that the batched
+path actually beats the serial one (a perf regression exits nonzero —
+CI runs ``--smoke``), and emits a ``BENCH_replay.json`` artifact.
+
+Since PR 4 the artifact also records the **hot-loop compaction**
+telemetry (DESIGN.md §7): per-grid ``pass_invocations`` vs lock-step
+``iters`` (the elision hit-rate) and the static/time-varying fork
+split, plus an ``ablation`` section timing each compaction knob —
+dynamic pass bounds, static-key hoisting, pass elision — separately
+against the all-off configuration (the PR-3-equivalent loop shape), so
+future PRs can see which optimization is paying.
 
 CLI:
     PYTHONPATH=src python benchmarks/baseline_sweep.py            # full
@@ -33,12 +40,27 @@ GRID_SIZES = (4, 8, 16)
 POOL_K = 7          # the extended static pool (ReplayGridConfig.pool)
 N_JOBS = 48
 N_JOBS_SMOKE = 16
+ABLATION_SIZE = 8   # representative grid for per-optimization ablations
 
 #: Keys the artifact must contain (checked after writing; missing keys
 #: are a hard failure so the benchmark cannot silently rot in CI).
-REQUIRED_KEYS = ("benchmark", "backend", "pool_k", "n_jobs", "grid")
+REQUIRED_KEYS = ("benchmark", "backend", "pool_k", "n_jobs", "grid",
+                 "ablation")
 REQUIRED_GRID_KEYS = ("serial_s", "batched_s", "batched_first_s",
-                      "speedup", "parity_bitwise", "combos")
+                      "speedup", "parity_bitwise", "combos",
+                      "pass_invocations", "iters", "elision_rate",
+                      "forks_static", "forks_time_varying")
+
+#: Compaction knob combinations (DESIGN.md §7).  ``pr3_equivalent`` is
+#: every knob off — the PR-3 loop shape on today's code.
+ABLATIONS = {
+    "full": {},
+    "no_dynamic_bounds": dict(dynamic_bounds=False),
+    "no_hoist": dict(hoist_static=False),
+    "no_elide": dict(elide_empty=False),
+    "pr3_equivalent": dict(dynamic_bounds=False, hoist_static=False,
+                           elide_empty=False),
+}
 
 
 def _grid_case(n_scenarios: int, n_jobs: int, seed: int):
@@ -50,10 +72,25 @@ def _grid_case(n_scenarios: int, n_jobs: int, seed: int):
     return cfg, traces, stack_scenarios(traces, cfg.total_nodes)
 
 
+def _time_grid(engine, scen, pool_spec, repeats: int):
+    """(best seconds, first-call seconds, last ReplayOutcome)."""
+    def grid():
+        out = engine.replay_grid(scen, pool_spec)
+        jax.block_until_ready(out.end_t)
+        return out
+
+    t0 = time.perf_counter()
+    out = grid()                    # includes compilation
+    first_s = time.perf_counter() - t0
+    best = min(_timed(grid) for _ in range(repeats))
+    return best, first_s, out
+
+
 def bench_grid(n_scenarios: int, n_jobs: int, seed: int = 0,
                repeats: int = 3) -> Dict[str, float | bool]:
     """One S×P grid: serial host loops vs one batched replay."""
     from repro.cluster.emulator import ClusterEmulator
+    from repro.core.policies import time_invariant_mask
 
     cfg, traces, scen = _grid_case(n_scenarios, n_jobs, seed)
     engine = cfg.make_engine()
@@ -67,15 +104,7 @@ def bench_grid(n_scenarios: int, n_jobs: int, seed: int = 0,
     serial_s = time.perf_counter() - t0
 
     # -- batched: the whole grid in one device computation -------------
-    def grid():
-        out = engine.replay_grid(scen, pool.spec)
-        jax.block_until_ready(out.end_t)
-        return out
-
-    t0 = time.perf_counter()
-    out = grid()                    # includes compilation
-    first_s = time.perf_counter() - t0
-    batched_s = min(_timed(grid) for _ in range(repeats))
+    batched_s, first_s, out = _time_grid(engine, scen, pool.spec, repeats)
 
     # -- parity: bit-identical to the host oracle ----------------------
     start = np.asarray(out.start_t)
@@ -88,6 +117,11 @@ def bench_grid(n_scenarios: int, n_jobs: int, seed: int = 0,
                                      rep.start_t.astype(np.float32))
             parity &= np.array_equal(end[s, p, :n],
                                      rep.end_t.astype(np.float32))
+
+    # -- compaction telemetry (DESIGN.md §7) ---------------------------
+    passes = int(out.result.pass_invocations)
+    iters = int(out.result.iters)
+    ti = time_invariant_mask(pool.spec)
     return {
         "serial_s": serial_s,
         "batched_s": batched_s,
@@ -95,7 +129,49 @@ def bench_grid(n_scenarios: int, n_jobs: int, seed: int = 0,
         "speedup": serial_s / max(batched_s, 1e-9),
         "parity_bitwise": bool(parity),
         "combos": n_scenarios * len(pool),
+        "pass_invocations": passes,
+        "iters": iters,
+        "events_total": int(np.asarray(out.events).sum()),
+        "elision_rate": 1.0 - passes / max(iters, 1),
+        "forks_static": int(ti.sum()),
+        "forks_time_varying": int((~ti).sum()),
     }
+
+
+def bench_ablations(n_scenarios: int, n_jobs: int, seed: int = 0,
+                    repeats: int = 3) -> Dict[str, Dict[str, float]]:
+    """Per-optimization ablation on one grid: every knob combination in
+    ``ABLATIONS``, all bit-identical (asserted), each timed.  The
+    ``speedup_vs_pr3`` of ``full`` is the acceptance number — the
+    compaction win over the PR-3-equivalent loop shape."""
+    from repro.core.engine import DrainEngine
+
+    cfg, _, scen = _grid_case(n_scenarios, n_jobs, seed)
+    pool = cfg.make_pool()
+    out: Dict[str, Dict[str, float]] = {}
+    baseline = None
+    for name, knobs in ABLATIONS.items():
+        eng = DrainEngine("reference", **knobs)
+        best, first_s, res = _time_grid(eng, scen, pool.spec, repeats)
+        row = {
+            "batched_s": best,
+            "batched_first_s": first_s,
+            "pass_invocations": int(res.result.pass_invocations),
+            "iters": int(res.result.iters),
+        }
+        if baseline is None:
+            baseline = (np.asarray(res.start_t), np.asarray(res.end_t))
+        elif not (np.array_equal(baseline[0], np.asarray(res.start_t))
+                  and np.array_equal(baseline[1], np.asarray(res.end_t))):
+            raise SystemExit(
+                f"compaction ablation {name!r} is not bit-identical to "
+                f"the full configuration — an optimization broke "
+                f"exactness")
+        out[name] = row
+    pr3 = out["pr3_equivalent"]["batched_s"]
+    for row in out.values():
+        row["speedup_vs_pr3"] = pr3 / max(row["batched_s"], 1e-9)
+    return out
 
 
 def _timed(fn) -> float:
@@ -112,6 +188,9 @@ def validate_artifact(path: str) -> None:
     for size, row in doc.get("grid", {}).items():
         missing += [f"grid.{size}.{k}" for k in REQUIRED_GRID_KEYS
                     if k not in row]
+    for name in ABLATIONS:
+        if name not in doc.get("ablation", {}):
+            missing.append(f"ablation.{name}")
     if missing:
         raise SystemExit(
             f"{path} is missing expected keys: {missing}")
@@ -130,13 +209,30 @@ def main(sizes: Sequence[int] = GRID_SIZES, smoke: bool = False,
             raise SystemExit(
                 f"replay/host parity broken at S={S}: batched grid is "
                 f"no longer bit-identical to the serial emulator loop")
+        if row["speedup"] <= 1.0:
+            raise SystemExit(
+                f"replay perf regression at S={S}: batched grid "
+                f"({row['batched_s']:.3f}s) no longer beats the serial "
+                f"loop ({row['serial_s']:.3f}s)")
         lines.append(
             f"baseline_sweep,S{S}xP{POOL_K},serial_s={row['serial_s']:.2f},"
             f"batched_s={row['batched_s']:.3f},"
             f"batched_first_s={row['batched_first_s']:.2f},"
             f"speedup={row['speedup']:.1f}x,"
             f"parity_bitwise={row['parity_bitwise']},"
-            f"combos={row['combos']}")
+            f"combos={row['combos']},"
+            f"passes={row['pass_invocations']}/{row['iters']},"
+            f"elision_rate={row['elision_rate']:.3f}")
+
+    abl_S = min(ABLATION_SIZE, max(sizes))
+    ablation = bench_ablations(abl_S, n_jobs, seed=seed, repeats=repeats)
+    for name, row in ablation.items():
+        lines.append(
+            f"baseline_sweep,ablation_{name},S{abl_S}xP{POOL_K},"
+            f"batched_s={row['batched_s']:.3f},"
+            f"passes={row['pass_invocations']}/{row['iters']},"
+            f"speedup_vs_pr3={row['speedup_vs_pr3']:.2f}x")
+
     doc = {
         "benchmark": "replay",
         "backend": jax.default_backend(),
@@ -145,6 +241,8 @@ def main(sizes: Sequence[int] = GRID_SIZES, smoke: bool = False,
         "n_jobs": n_jobs,
         "smoke": smoke,
         "grid": grid,
+        "ablation": ablation,
+        "ablation_grid_size": abl_S,
     }
     with open(out, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
@@ -164,7 +262,8 @@ if __name__ == "__main__":
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_replay.json")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke mode: small traces, 1 repeat")
+                    help="CI smoke mode: small traces, 1 repeat; still "
+                         "asserts bitwise parity and batched > serial")
     args = ap.parse_args()
     for line in main(sizes=tuple(args.sizes or GRID_SIZES),
                      smoke=args.smoke, seed=args.seed, out=args.out):

@@ -6,12 +6,14 @@ what-if engine alone (post-compilation — what a persistent daemon
 pays), (c) a backend shoot-out across policy pool sizes: the
 policy-batched ``DrainEngine`` (``reference`` and ``pallas`` backends)
 against the legacy ``jax.vmap``-over-scalar-DES path it replaced
-(DESIGN.md §3), and (d) **parametric sweep pools**: θ-grid
+(DESIGN.md §3), (d) **parametric sweep pools**: θ-grid
 ``PolicySpec`` pools at k∈{16, 64, 128} plus the DRAS-style 25-point
 (WFP exponent × aging timescale) sweep riding with the 7 static specs
 (k=32, ``configs.schedtwin.DRAS_SWEEP_POOL``) — the per-cycle latency
-the tentpole's parameter-sweep drains cost.  Everything is emitted as
-a ``BENCH_overhead.json`` artifact.
+the tentpole's parameter-sweep drains cost — and (e) the **hot-loop
+compaction ablation** (DESIGN.md §7): decide latency and drain
+pass-invocation counts under each compaction knob.  Everything is
+emitted as a ``BENCH_overhead.json`` artifact.
 
 CLI:
     PYTHONPATH=src python benchmarks/overhead.py               # {3,7,32}
@@ -121,6 +123,43 @@ def bench_sweep_pools(state, sweep_sizes: Sequence[int] = SWEEP_SIZES,
     return out
 
 
+def bench_compaction(state, n_iter: int = 10, repeats: int = 2
+                     ) -> Dict[str, Dict[str, float]]:
+    """Hot-loop compaction ablation on the decide path (DESIGN.md §7):
+    per-cycle latency of the k=7 extended pool under every compaction
+    knob combination, plus the drain's pass-invocation count and the
+    pool's static/time-varying fork split — so BENCH_overhead.json
+    records which optimization is paying on the what-if (drain) side,
+    mirroring BENCH_replay.json's replay-side ablation."""
+    from repro.core.policies import time_invariant_mask
+    pool = make_pool(7)
+    combos = {
+        "full": {},
+        "no_dynamic_bounds": dict(dynamic_bounds=False),
+        "no_hoist": dict(hoist_static=False),
+        "pr3_equivalent": dict(dynamic_bounds=False, hoist_static=False,
+                               elide_empty=False),
+    }
+    out: Dict[str, Dict[str, float]] = {}
+    for name, knobs in combos.items():
+        eng = DrainEngine("reference", **knobs)
+        us = _bench(
+            lambda: jax.block_until_ready(eng.decide(state, pool).costs),
+            n_iter, repeats) * 1e6
+        res = eng.drain(state, pool)
+        out[name] = {
+            "engine_reference_us": us,
+            "pass_invocations": float(np.asarray(res.pass_invocations)[0]),
+        }
+    ti = time_invariant_mask(pool)
+    out["full"]["forks_static"] = float(ti.sum())
+    out["full"]["forks_time_varying"] = float((~ti).sum())
+    pr3 = out["pr3_equivalent"]["engine_reference_us"]
+    for row in out.values():
+        row["speedup_vs_pr3"] = pr3 / max(row["engine_reference_us"], 1e-9)
+    return out
+
+
 def bench_dras_sweep(state, n_iter: int = 5, repeats: int = 2
                      ) -> Dict[str, float | str]:
     """The acceptance sweep: DRAS-style 5x5 grid over the WFP exponent
@@ -202,6 +241,16 @@ def main(seed: int = 0, pool_sizes: Sequence[int] = POOL_SIZES,
         f"engine_reference_us={dras['engine_reference_us']:.0f},"
         f"grammar={dras['grammar']}")
     extra["dras_sweep"] = dras
+
+    # (d2) hot-loop compaction ablation on the decide path (§7)
+    compaction = bench_compaction(state, n_iter_sweep, repeats_sweep)
+    for name, row in compaction.items():
+        lines.append(
+            f"overhead,compaction_{name},"
+            f"engine_reference_us={row['engine_reference_us']:.0f},"
+            f"passes={row['pass_invocations']:.0f},"
+            f"speedup_vs_pr3={row['speedup_vs_pr3']:.2f}x")
+    extra["compaction"] = compaction
 
     write_artifact(engines, out, extra)
     lines.append(f"overhead,artifact,path={out}")

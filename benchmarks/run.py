@@ -3,6 +3,10 @@
 Prints ``name,key=value,...`` CSV lines.  ``python -m benchmarks.run``
 runs everything; pass benchmark names to run a subset, e.g.
 ``python -m benchmarks.run figure3_radar overhead``.
+
+``--no-compile-cache`` skips the persistent XLA compilation cache
+(enabled by default so repeat benchmark invocations start from warm
+HLO; disable it when measuring cold-compile latency itself).
 """
 from __future__ import annotations
 
@@ -11,6 +15,12 @@ import time
 
 
 def main() -> None:
+    args = sys.argv[1:]
+    use_cache = "--no-compile-cache" not in args
+    args = [a for a in args if a != "--no-compile-cache"]
+    from repro.launch.cache import enable_persistent_cache
+    enable_persistent_cache(enabled=use_cache)
+
     from benchmarks import (baseline_sweep, bursty, figure1_jobdist,
                             figure3_radar, overhead, roofline,
                             table1_policy_dist)
@@ -23,7 +33,7 @@ def main() -> None:
         "bursty": bursty.main,
         "baseline_sweep": baseline_sweep.main,
     }
-    chosen = sys.argv[1:] or list(suite)
+    chosen = args or list(suite)
     t0 = time.perf_counter()
     for name in chosen:
         if name not in suite:

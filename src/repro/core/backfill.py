@@ -58,17 +58,45 @@ def priority_order(state: SimState, policy) -> jax.Array:
     return jnp.argsort(keys)
 
 
+def static_priority_order(state: SimState, policy,
+                          ever_queued: jax.Array) -> jax.Array:
+    """Hoisted priority order for a TIME-INVARIANT fork (DESIGN.md §7):
+    ranked over every slot that can EVER be queued (``ever_queued``),
+    not just the currently-queued set, so it is computed ONCE per drain
+    or replay and reused at every event.
+
+    Exactness: for a fork in ``policies.time_invariant_mask`` the keys
+    of ever-queued slots never change, so at any event the
+    currently-queued slots form a subsequence of this order sorted by
+    (key, slot) — identical to the fresh ``priority_order`` ranking —
+    and the scheduling pass skips non-QUEUED ranks as no-ops."""
+    if isinstance(policy, policies.PolicySpec):
+        keys = policies.priority_key_spec(state.jobs, state.now, policy)
+    else:
+        keys = policies.priority_key(state.jobs, state.now, policy)
+    keys = jnp.where(ever_queued, keys, jnp.inf)
+    return jnp.argsort(keys)
+
+
 def schedule_pass(state: SimState, policy) -> PassResult:
     """Keys + argsort + the order-driven pass (scalar convenience)."""
     return schedule_pass_with_order(state, priority_order(state, policy))
 
 
-def schedule_pass_with_order(state: SimState, order: jax.Array) -> PassResult:
+def schedule_pass_with_order(state: SimState, order: jax.Array,
+                             limit=None) -> PassResult:
     """The pass proper, given a precomputed priority ``order``.
 
     This is the sequential part every backend must implement; the
     ``reference`` engine backend is exactly this function vmapped over
     the policy/ensemble batch axis.
+
+    ``limit`` (optional i32 scalar) bounds both rank loops: ranks in
+    ``[limit, max_jobs)`` must hold no queued slot (the caller computes
+    it as ``des.pass_rank_limit``), making them provably no-ops in both
+    the greedy and the backfill walk — so truncation is bit-exact while
+    collapsing the O(J)-rank loops to the live queue depth.  ``None``
+    keeps the full static bound (the pre-compaction behavior).
     """
     jobs = state.jobs
     now = state.now
@@ -79,48 +107,70 @@ def schedule_pass_with_order(state: SimState, order: jax.Array) -> PassResult:
     est = jobs.est_runtime
 
     # ---- pass 1: greedy start until the first blocked job (the head) ----
-    def greedy_body(i, carry):
-        free, head_idx, head_found, started = carry
-        j = order[i]
-        is_q = queued[j]
-        fits = nodes[j] <= free
-        can_start = is_q & fits & (~head_found)
-        free = jnp.where(can_start, free - nodes[j], free)
-        started = started.at[j].set(started[j] | can_start)
-        blocked = is_q & (~fits) & (~head_found)
-        head_idx = jnp.where(blocked, j, head_idx)
-        head_found = head_found | blocked
-        return free, head_idx, head_found, started
-
+    # "Start each queued job in order while it fits; the first one that
+    # does not fit blocks everything behind it" is a PREFIX property,
+    # so the historical sequential rank loop has a closed form: with
+    # need(r) = cumulative node demand over queued ranks <= r, a queued
+    # rank starts iff need(r) <= free0 (before the head, free at rank r
+    # is exactly free0 - (need(r) - nodes_r); at and past the head,
+    # need(r) > free0 by monotonicity).  One cumsum replaces the O(J)
+    # dependent-iteration loop — bit-exact, all-integer arithmetic.
+    rank_hi = max_jobs if limit is None else limit
     free0 = state.free_nodes
-    started0 = jnp.zeros((max_jobs,), dtype=bool)
-    free1, head_idx, head_found, started1 = jax.lax.fori_loop(
-        0, max_jobs, greedy_body,
-        (free0, jnp.int32(-1), jnp.asarray(False), started0))
+    q_rank = queued[order]                          # rank space (J,)
+    nodes_rank = jnp.where(q_rank, nodes[order], 0)
+    need = jnp.cumsum(nodes_rank)
+    fits_rank = need <= free0
+    blocked_rank = q_rank & ~fits_rank
+    head_found = jnp.any(blocked_rank)
+    head_rank = jnp.argmax(blocked_rank)            # first blocked rank
+    started_rank = q_rank & fits_rank
+    started1 = jnp.zeros((max_jobs,), dtype=bool).at[order].set(started_rank)
+    free1 = free0 - jnp.sum(jnp.where(started_rank, nodes_rank, 0))
+    head_idx = jnp.where(head_found, order[head_rank], jnp.int32(-1))
 
     # ---- shadow time: when can the head start, given predicted ends? ----
     # Running set includes jobs started in pass 1 (their predicted end is
     # now + estimate; the twin never sees true runtimes).
+    #
+    # Historically: stable argsort by end time + cumsum scan, taking the
+    # FIRST feasible sorted position.  The sort is replaced by an O(J²)
+    # broadcast-reduce (the Pallas kernel's trade, DESIGN.md §2) that
+    # keeps the sort-scan's exact semantics — ties included — by
+    # contracting over the LEXICOGRAPHIC (end, slot) order the stable
+    # argsort would have produced: cum(i) = free1 + Σ_j nodes_r(j) over
+    # (e_j, j) <= (e_i, i).  cum is nondecreasing along that order, so
+    # the first feasible position is the lex-min feasible item and both
+    # its end time and its cumulative count are plain min-reductions.
+    # All-integer node arithmetic -> bit-exact vs the sort-scan.
     running = (jobs.state == RUNNING) | started1
     end_eff = jnp.where(started1, now + est, jobs.end_t)
     end_eff = jnp.where(running, end_eff, jnp.inf)
     nodes_r = jnp.where(running, nodes, 0)
 
-    sort_idx = jnp.argsort(end_eff)
-    ends_sorted = end_eff[sort_idx]
-    cum_free = free1 + jnp.cumsum(nodes_r[sort_idx])
+    slots = jnp.arange(max_jobs)
+    lex_le = ((end_eff[None, :] < end_eff[:, None])
+              | ((end_eff[None, :] == end_eff[:, None])
+                 & (slots[None, :] <= slots[:, None])))
+    # contraction as an f32 matvec (BLAS beats a masked reduce on CPU);
+    # node counts are tiny integers, so f32 accumulation is exact and
+    # the round-trip back to i32 is lossless
+    cum_free = free1 + jnp.einsum(
+        "ij,j->i", lex_le.astype(jnp.float32),
+        nodes_r.astype(jnp.float32)).astype(jnp.int32)      # (J,)
 
     head_nodes = jnp.where(head_found, nodes[head_idx], 0)
-    feasible = (cum_free >= head_nodes) & jnp.isfinite(ends_sorted)
+    feasible = (cum_free >= head_nodes) & jnp.isfinite(end_eff)
     any_feasible = jnp.any(feasible)
-    k = jnp.argmax(feasible)  # first feasible completion
     shadow_time = jnp.where(
         head_found,
-        jnp.where(any_feasible, ends_sorted[k], jnp.inf),
+        jnp.min(jnp.where(feasible, end_eff, jnp.inf)),
         jnp.inf)
+    cum_first = jnp.min(
+        jnp.where(feasible, cum_free, jnp.iinfo(jnp.int32).max))
     extra = jnp.where(
         head_found & any_feasible,
-        cum_free[k] - head_nodes,
+        cum_first - head_nodes,
         # no head -> unconstrained (vacuous: no queued jobs remain)
         jnp.where(head_found, 0, jnp.iinfo(jnp.int32).max // 2))
 
@@ -139,8 +189,13 @@ def schedule_pass_with_order(state: SimState, order: jax.Array) -> PassResult:
         started = started.at[j].set(started[j] | start)
         return free, extra, started
 
+    # Every rank up to and including the head is a provable non-candidate
+    # (queued ranks before the head all started in pass 1; the head is
+    # excluded by ``j != head_idx``), so the walk starts past it — and
+    # is empty when there is no head (every queued job already started).
+    back_lo = jnp.where(head_found, head_rank + 1, rank_hi)
     free2, _, started = jax.lax.fori_loop(
-        0, max_jobs, backfill_body, (free1, extra, started1))
+        back_lo, rank_hi, backfill_body, (free1, extra, started1))
 
     # ---- apply -------------------------------------------------------
     new_jobs = jobs._replace(

@@ -57,6 +57,9 @@ class DrainResult(NamedTuple):
                              # the twin's actionable decision (§3.4, 6A)
     iters: jax.Array         # i32 — events processed
     deadlocked: jax.Array    # bool — a queued job can never fit
+    pass_invocations: jax.Array  # i32 — scheduling passes executed; the
+                                 # batched drain runs one per lock-step
+                                 # iteration (same count for every fork)
 
 
 def simulate_to_drain(state: SimState, policy_id) -> DrainResult:
@@ -102,17 +105,37 @@ def simulate_to_drain(state: SimState, policy_id) -> DrainResult:
             jnp.int32(0),
             jnp.asarray(False))
     st, first, it, dead = jax.lax.while_loop(cond, body, init)
-    return DrainResult(state=st, first_started=first, iters=it, deadlocked=dead)
+    return DrainResult(state=st, first_started=first, iters=it,
+                       deadlocked=dead, pass_invocations=it)
 
 
 # ----------------------------------------------------------------------
 # Batched drain — the engine's hot path.
 # ----------------------------------------------------------------------
 
-# A batched pass: (batched SimState, order (k, J) i32) -> started (k, J)
-# bool.  Implementations live in repro/core/engine.py (the backend
-# registry); des.py only defines the drain loop around them.
-BatchedPassFn = Callable[[SimState, jax.Array], jax.Array]
+# A batched pass: (batched SimState, order (k, J) i32, rank limit — an
+# i32 scalar or None for the full static bound) -> started (k, J) bool.
+# Implementations live in repro/core/engine.py (the backend registry);
+# des.py only defines the drain loop around them.
+BatchedPassFn = Callable[[SimState, jax.Array, object], jax.Array]
+
+
+def pass_rank_limit(states: SimState, fork_mask: jax.Array) -> jax.Array:
+    """Dynamic pass bound (DESIGN.md §7): the batch-max queued count
+    over live forks — an i32 scalar shared by the whole lock-step batch.
+
+    Contract: every (k, J) order the engine produces is QUEUED-FIRST —
+    fresh argsorts mask non-queued keys to +inf, and hoisted static
+    orders are stable-partition-compacted per event
+    (``engine.make_order_fn``) — so each fork's queued slots occupy
+    ranks ``[0, n_queued)`` and every rank at or past the batch-max
+    count cannot start anything (the pass skips non-QUEUED slots).
+    Truncating the sequential rank loops there is therefore bit-exact.
+    ``fork_mask`` excludes forks whose pass output is masked away
+    anyway (done/dead/not-live), so a deadlocked fork's eternally-queued
+    job cannot pin the bound at J."""
+    n_queued = jnp.sum(states.jobs.state == QUEUED, axis=1)      # (k,)
+    return jnp.max(jnp.where(fork_mask, n_queued, 0)).astype(jnp.int32)
 
 
 def broadcast_state(state: SimState, k: int) -> SimState:
@@ -142,19 +165,28 @@ def apply_starts(st: SimState, started: jax.Array) -> SimState:
 
 
 def simulate_to_drain_batched(states: SimState, order_fn: Callable[[SimState], jax.Array],
-                              pass_fn: BatchedPassFn) -> DrainResult:
+                              pass_fn: BatchedPassFn,
+                              dynamic_bounds: bool = True) -> DrainResult:
     """Drain all k forks of ``states`` (leading batch axis on every
     leaf) in lock-step with per-fork done/dead masks.
 
     ``order_fn`` maps the batched state to the (k, J) priority order —
     ONE batched key computation + argsort per event for the whole fork
     axis.  ``pass_fn`` runs the sequential greedy/backfill pass on the
-    batch (reference vmap or the Pallas grid).
+    batch (reference vmap or the Pallas grid) up to a rank limit:
+    ``dynamic_bounds`` truncates both rank loops at the batch-max
+    queued rank (``pass_rank_limit`` — bit-exact; DESIGN.md §7), which
+    also shrinks the drain tail where only a few forks remain active.
 
     Per-fork semantics are identical to ``simulate_to_drain``: a fork
     that drains (or deadlocks) freezes while the rest keep stepping, so
     the batched result is bit-for-bit the stack of k scalar drains
     (asserted by tests/test_engine.py).
+
+    No pass-elision ``cond`` here: the loop condition already requires
+    some fork to be active (~dead with a queued job), so "no live fork
+    has a queued job" can never hold inside the body — elision lives in
+    the replay loop, where completion-only stretches make it fire.
     """
     k = states.now.shape[0]
     max_jobs = states.jobs.capacity
@@ -173,7 +205,9 @@ def simulate_to_drain_batched(states: SimState, order_fn: Callable[[SimState], j
 
         # ---- schedule pass on the whole batch ------------------------
         order = order_fn(st)                                # (k, J)
-        started = pass_fn(st, order) & active[:, None]      # (k, J)
+        limit = (pass_rank_limit(st, active)
+                 if dynamic_bounds else None)
+        started = pass_fn(st, order, limit) & active[:, None]  # (k, J)
         st = apply_starts(st, started)
         first = jnp.where(it == 0, started, first)
 
@@ -201,9 +235,10 @@ def simulate_to_drain_batched(states: SimState, order_fn: Callable[[SimState], j
             jnp.int32(0),
             jnp.zeros((k,), dtype=bool),
             jnp.zeros((k,), dtype=jnp.int32))
-    st, first, _, dead, iters = jax.lax.while_loop(cond, body, init)
+    st, first, it, dead, iters = jax.lax.while_loop(cond, body, init)
     return DrainResult(state=st, first_started=first, iters=iters,
-                       deadlocked=dead)
+                       deadlocked=dead,
+                       pass_invocations=jnp.full((k,), it, dtype=jnp.int32))
 
 
 # ----------------------------------------------------------------------
@@ -215,12 +250,16 @@ class ReplayResult(NamedTuple):
     events: jax.Array        # i32 (k,) — events processed per fork
     iters: jax.Array         # i32 scalar — lock-step iterations
     deadlocked: jax.Array    # bool (k,) — a queued job can never run
+    pass_invocations: jax.Array  # i32 scalar — scheduling passes actually
+                                 # executed (< iters when elision fires)
 
 
 def simulate_replay_batched(states: SimState, arrival_t: jax.Array,
                             true_rt: jax.Array,
                             order_fn: Callable[[SimState], jax.Array],
-                            pass_fn: BatchedPassFn) -> ReplayResult:
+                            pass_fn: BatchedPassFn,
+                            dynamic_bounds: bool = True,
+                            elide_empty: bool = True) -> ReplayResult:
     """Replay k trace forks event-by-event in lock-step.
 
     ``states`` is a batched ``SimState`` whose job table is *preloaded*
@@ -249,6 +288,14 @@ def simulate_replay_batched(states: SimState, arrival_t: jax.Array,
     cluster) — other forks keep stepping either way.  The iteration
     bound is 2·J + 2: every live iteration consumes one arrival or one
     completion (≤ J of each), plus one iteration to flag deadlock.
+
+    Hot-loop compaction (DESIGN.md §7): ``dynamic_bounds`` truncates
+    the pass's rank loops at the deepest live queued rank
+    (``pass_rank_limit``); ``elide_empty`` wraps keys + argsort + pass
+    in a scalar ``lax.cond`` that skips the whole stage on iterations
+    where no live fork has a queued job after the event is applied
+    (completion-only stretches of sparse traces) — bit-exact, since the
+    pass can only ever start queued jobs of live forks.
     """
     k = states.now.shape[0]
     max_jobs = states.jobs.capacity
@@ -262,7 +309,7 @@ def simulate_replay_batched(states: SimState, arrival_t: jax.Array,
         return jnp.where(cursor < max_jobs, t, jnp.inf), cur
 
     def cond(carry):
-        st, cursor, true_end, start_ord, it, dead, events = carry
+        st, cursor, true_end, start_ord, it, dead, events, passes = carry
         next_arr, _ = next_arrival(cursor)
         jstate = st.jobs.state
         work = (jnp.isfinite(next_arr)
@@ -271,7 +318,7 @@ def simulate_replay_batched(states: SimState, arrival_t: jax.Array,
         return (it < max_iters) & jnp.any(work & ~dead)
 
     def body(carry):
-        st, cursor, true_end, start_ord, it, dead, events = carry
+        st, cursor, true_end, start_ord, it, dead, events, passes = carry
         jobs = st.jobs
 
         # ---- pick each fork's next event -----------------------------
@@ -309,15 +356,35 @@ def simulate_replay_batched(states: SimState, arrival_t: jax.Array,
         )
 
         # ---- one scheduling pass on the whole batch ------------------
-        order = order_fn(st)
-        started = pass_fn(st, order) & live[:, None]
-        st = apply_starts(st, started)
-        true_end = jnp.where(started, st.now[:, None] + true_rt, true_end)
-        start_ord = jnp.where(started,
-                              it * (max_jobs + 1) + slots[None, :],
-                              start_ord)
+        # Only live forks' starts survive the mask below, so the pass
+        # is pure overhead whenever no live fork has a queued job:
+        # elide keys + argsort + pass behind one scalar cond.  The rank
+        # limit doubles as the elision predicate — limit > 0 iff some
+        # live fork has a queued job.
+        limit = pass_rank_limit(st, live)
+
+        def run_pass(op):
+            st, true_end, start_ord, passes = op
+            order = order_fn(st)
+            started = pass_fn(st, order,
+                              limit if dynamic_bounds else None)
+            started = started & live[:, None]
+            st = apply_starts(st, started)
+            true_end = jnp.where(started, st.now[:, None] + true_rt,
+                                 true_end)
+            start_ord = jnp.where(started,
+                                  it * (max_jobs + 1) + slots[None, :],
+                                  start_ord)
+            return st, true_end, start_ord, passes + 1
+
+        op = (st, true_end, start_ord, passes)
+        if elide_empty:
+            st, true_end, start_ord, passes = jax.lax.cond(
+                limit > 0, run_pass, lambda o: o, op)
+        else:
+            st, true_end, start_ord, passes = run_pass(op)
         return (st, cursor, true_end, start_ord, it + 1, dead,
-                events + live.astype(jnp.int32))
+                events + live.astype(jnp.int32), passes)
 
     init = (states,
             jnp.zeros((k,), dtype=jnp.int32),
@@ -325,9 +392,12 @@ def simulate_replay_batched(states: SimState, arrival_t: jax.Array,
             jnp.full((k, max_jobs), ord_none, dtype=jnp.int32),
             jnp.int32(0),
             jnp.zeros((k,), dtype=bool),
-            jnp.zeros((k,), dtype=jnp.int32))
-    st, _, _, _, it, dead, events = jax.lax.while_loop(cond, body, init)
-    return ReplayResult(state=st, events=events, iters=it, deadlocked=dead)
+            jnp.zeros((k,), dtype=jnp.int32),
+            jnp.int32(0))
+    st, _, _, _, it, dead, events, passes = jax.lax.while_loop(
+        cond, body, init)
+    return ReplayResult(state=st, events=events, iters=it, deadlocked=dead,
+                        pass_invocations=passes)
 
 
 class DrainMetrics(NamedTuple):

@@ -48,23 +48,41 @@ from __future__ import annotations
 import dataclasses
 import functools
 import logging
-from typing import Callable, Dict, NamedTuple, Optional, Union
+import warnings
+from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import scoring
-from repro.core.backfill import priority_order, schedule_pass_with_order
+from repro.core.backfill import (priority_order,
+                                 schedule_pass_with_order,
+                                 static_priority_order)
 from repro.core.des import (DrainMetrics, DrainResult, ReplayResult,
                             broadcast_state, drain_metrics,
                             simulate_replay_batched,
                             simulate_to_drain_batched, state_metrics)
-from repro.core.policies import PolicySpec
+from repro.core.policies import PolicySpec, time_invariant_mask
 from repro.core.state import (QUEUED, RUNNING, TIME_NONE, JobTable,
                               SimState)
 from repro.kernels import policy_eval as _pe
 
 logger = logging.getLogger(__name__)
+
+
+def _quiet_donation(jitted):
+    """Buffer donation on ``_drain``/``_replay`` lets XLA update the
+    (k, J) while-loop carries in place; backends without donation
+    support (CPU) warn per compile.  Suppress exactly that warning,
+    exactly around this engine's donated calls — never globally."""
+    @functools.wraps(jitted)
+    def call(*args, **kwargs):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return jitted(*args, **kwargs)
+    return call
 
 #: What the engine accepts as a pool: a parametric ``PolicySpec`` with
 #: a leading fork axis (the post-tentpole representation) or a legacy
@@ -127,10 +145,11 @@ class ReplayOutcome(NamedTuple):
 
 
 # ----------------------------------------------------------------------
-# Pass backends: (batched SimState, order (k, J)) -> started (k, J) bool
+# Pass backends: (batched SimState, order (k, J), rank limit (i32
+# scalar | None)) -> started (k, J) bool
 # ----------------------------------------------------------------------
 
-PassFn = Callable[[SimState, jax.Array], jax.Array]
+PassFn = Callable[[SimState, jax.Array, object], jax.Array]
 PASS_BACKENDS: Dict[str, Callable[["DrainEngine"], PassFn]] = {}
 
 
@@ -145,9 +164,12 @@ def register_backend(name: str):
 
 @register_backend("reference")
 def _reference_backend(engine: "DrainEngine") -> PassFn:
-    """The pure-JAX oracle pass, vmapped over the fork axis."""
-    def pass_fn(states: SimState, order: jax.Array) -> jax.Array:
-        res = jax.vmap(schedule_pass_with_order)(states, order)
+    """The pure-JAX oracle pass, vmapped over the fork axis (the rank
+    limit is a lock-step scalar shared by every fork, so it maps with
+    ``in_axes=None``)."""
+    def pass_fn(states: SimState, order: jax.Array, limit) -> jax.Array:
+        res = jax.vmap(schedule_pass_with_order,
+                       in_axes=(0, 0, None))(states, order, limit)
         return res.started
     return pass_fn
 
@@ -156,7 +178,7 @@ def _reference_backend(engine: "DrainEngine") -> PassFn:
 def _pallas_backend(engine: "DrainEngine") -> PassFn:
     interpret = engine.resolved_interpret()
 
-    def pass_fn(states: SimState, order: jax.Array) -> jax.Array:
+    def pass_fn(states: SimState, order: jax.Array, limit) -> jax.Array:
         jobs = states.jobs
         running = jobs.state == RUNNING
         started, _ = _pe.policy_eval_pass_batched(
@@ -168,6 +190,7 @@ def _pallas_backend(engine: "DrainEngine") -> PassFn:
             jnp.where(running, jobs.nodes, 0),
             states.free_nodes,
             states.now,
+            limit,
             interpret=interpret)
         return started > 0
     return pass_fn
@@ -184,6 +207,102 @@ def batched_priority_order(states: SimState, pool: EnginePool) -> jax.Array:
     axis vmap maps over.  θ stays in this stage — outside the pass
     kernel — so backends are untouched by pool parameterization."""
     return jax.vmap(priority_order)(states, pool)
+
+
+# ----------------------------------------------------------------------
+# Static-key hoisting (DESIGN.md §7): forks whose keys never depend on
+# the clock get their argsort computed ONCE, outside the event loop.
+# ----------------------------------------------------------------------
+
+#: A hoist plan: per-fork "keys are time-invariant" bools, decided on
+#: the HOST (``policies.time_invariant_mask`` over the concrete pool)
+#: and passed as a *static* jit argument — the fork-axis split must be
+#: known at trace time for the gather/sort/scatter below to have static
+#: shapes.  ``None`` disables hoisting (every fork re-sorts per event).
+HoistPlan = Optional[Tuple[bool, ...]]
+
+
+def hoist_plan(pool: EnginePool, enabled: bool = True) -> HoistPlan:
+    """Derive the static hoist plan from a CONCRETE pool.  Returns None
+    when hoisting is disabled, no fork qualifies, or the pool is a
+    tracer (e.g. inside a caller's jit / under sharding constraints) —
+    the engine then falls back to per-event sorting for all forks."""
+    if not enabled:
+        return None
+    leaves = jax.tree.leaves(pool)
+    if any(isinstance(leaf, jax.core.Tracer) for leaf in leaves):
+        return None
+    mask = time_invariant_mask(pool)
+    if not mask.any():
+        return None
+    return tuple(bool(b) for b in mask)
+
+
+def _index_pool(pool: EnginePool, idx: jax.Array) -> EnginePool:
+    if isinstance(pool, PolicySpec):
+        return PolicySpec(pool.family[idx], pool.theta[idx])
+    return pool[idx]
+
+
+def _compact_queued_first(order: jax.Array, queued: jax.Array) -> jax.Array:
+    """Stable-partition each fork's rank order so QUEUED slots occupy
+    the leading ranks — one cumsum + row scatter, O(k·J), no sort.
+
+    The relative order of queued ranks is preserved, so the pass visits
+    the exact same queued sequence (non-queued ranks are no-ops either
+    way) — bit-exact — while restoring ``des.pass_rank_limit``'s
+    queued-first contract for hoisted static orders, whose queued slots
+    would otherwise sit scattered at arbitrary rank depths and pin the
+    dynamic bound near J."""
+    q = jnp.take_along_axis(queued, order, axis=1)          # (k, J)
+    nq = jnp.cumsum(q, axis=1)
+    pos = jnp.where(q, nq - 1, nq[:, -1:] + jnp.cumsum(~q, axis=1) - 1)
+    k = order.shape[0]
+    return jnp.zeros_like(order).at[jnp.arange(k)[:, None], pos].set(order)
+
+
+def make_order_fn(states0: SimState, pool: EnginePool, plan: HoistPlan,
+                  ever_queued: jax.Array) -> Callable[[SimState], jax.Array]:
+    """The per-event order stage, with static-key forks hoisted.
+
+    ``ever_queued`` (k, J) marks every slot that can EVER be queued
+    during this drain/replay (drain: currently queued; replay: slots
+    with a finite arrival).  Time-invariant forks (per ``plan``) rank
+    those slots once via ``backfill.static_priority_order`` — exact
+    because their keys never change and the pass skips non-QUEUED
+    ranks — so each event's (k, J) sort shrinks to the time-varying
+    rows only (or disappears entirely for an all-static pool).  The
+    hoisted rows are re-compacted queued-first per event (a cumsum, not
+    a sort) to keep the dynamic pass bound tight.
+    """
+    if plan is None:
+        return lambda st: batched_priority_order(st, pool)
+    plan_arr = np.asarray(plan, dtype=bool)
+    ti_idx = jnp.asarray(np.nonzero(plan_arr)[0], dtype=jnp.int32)
+    states_ti = jax.tree.map(lambda x: x[ti_idx], states0)
+    hoisted = jax.vmap(static_priority_order)(
+        states_ti, _index_pool(pool, ti_idx), ever_queued[ti_idx])
+
+    if plan_arr.all():
+        # zero per-event sorting: just repartition the fixed ranking
+        def order_fn_all(st: SimState) -> jax.Array:
+            return _compact_queued_first(hoisted, st.jobs.state == QUEUED)
+        return order_fn_all
+
+    tv_idx = jnp.asarray(np.nonzero(~plan_arr)[0], dtype=jnp.int32)
+    pool_tv = _index_pool(pool, tv_idx)
+    # merge hoisted + fresh rows with ONE static gather (a concat and
+    # an inverse permutation) instead of two row scatters
+    perm = np.concatenate([np.nonzero(plan_arr)[0], np.nonzero(~plan_arr)[0]])
+    inv = jnp.asarray(np.argsort(perm), dtype=jnp.int32)
+
+    def order_fn(st: SimState) -> jax.Array:
+        compacted = _compact_queued_first(
+            hoisted, (st.jobs.state == QUEUED)[ti_idx])
+        st_tv = jax.tree.map(lambda x: x[tv_idx], st)
+        fresh = batched_priority_order(st_tv, pool_tv)
+        return jnp.concatenate([compacted, fresh], axis=0)[inv]
+    return order_fn
 
 
 # ----------------------------------------------------------------------
@@ -206,10 +325,24 @@ class DrainEngine:
         kernel only pays off compiled).  The resolved choice is logged.
     interpret : Pallas interpret-mode override.  ``None`` auto-detects:
         interpret on CPU (this container), compiled on TPU.
+    dynamic_bounds : truncate the pass's sequential rank loops at the
+        deepest live queued rank each event (``des.pass_rank_limit``) —
+        bit-exact; collapses the O(J)-rank loops to the queue depth.
+    hoist_static : hoist the argsort of time-invariant forks
+        (``policies.time_invariant_mask``) out of the event loop.
+    elide_empty : skip keys + argsort + pass entirely on replay
+        iterations where no live fork has a queued job.
+
+    The three compaction knobs (DESIGN.md §7) exist for ablation
+    benchmarks and bit-identity tests against the uncompacted engine;
+    production code leaves them on.
     """
 
     backend: str = "reference"
     interpret: Optional[bool] = None
+    dynamic_bounds: bool = True
+    hoist_static: bool = True
+    elide_empty: bool = True
 
     def __post_init__(self) -> None:
         if self.backend == "auto":
@@ -231,26 +364,37 @@ class DrainEngine:
     def pass_fn(self) -> PassFn:
         return PASS_BACKENDS[self.backend](self)
 
+    def plan(self, pool: EnginePool) -> HoistPlan:
+        """The static hoist plan this engine uses for ``pool`` (None
+        when ``hoist_static`` is off or no fork qualifies)."""
+        return hoist_plan(pool, enabled=self.hoist_static)
+
     # -- drains --------------------------------------------------------
     def drain_batched(self, states: SimState, pool: EnginePool) -> DrainResult:
-        """Drain pre-batched fork states (leading axis == pool)."""
-        return _drain(self, states, pool)
+        """Drain pre-batched fork states (leading axis == pool).
+
+        ``states`` buffers are DONATED to the computation (in-place
+        carry updates on backends that support it) — don't reuse them
+        after the call."""
+        return _drain(self, states, pool, self.plan(pool))
 
     def drain(self, state: SimState, pool: EnginePool) -> DrainResult:
         """Fork one snapshot across the pool and drain all forks."""
-        return _drain(self, broadcast_state(state, pool_size(pool)), pool)
+        return _drain(self, broadcast_state(state, pool_size(pool)),
+                      pool, self.plan(pool))
 
     # -- decision cycles ----------------------------------------------
     def decide(self, state: SimState, pool: EnginePool,
                weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS
                ) -> Decision:
-        return _decide(self, state, pool, weights)
+        return _decide(self, state, pool, weights, self.plan(pool))
 
     def decide_ensemble(self, state: SimState, pool: EnginePool,
                         key: jax.Array, n_ens: int = 8, noise: float = 0.3,
                         weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
                         ) -> Decision:
-        return _decide_ensemble(self, state, pool, key, n_ens, noise, weights)
+        return _decide_ensemble(self, state, pool, key, n_ens, noise,
+                                weights, self.plan(pool))
 
     # -- single pass (k=1) — the emulator's static baseline mode -------
     def schedule_pass_starts(self, state: SimState, policy) -> jax.Array:
@@ -268,7 +412,8 @@ class DrainEngine:
             raise ValueError(
                 f"replay takes one scenario (got {S}); use replay_grid")
         pool = as_pool(pool)
-        res, metrics = _replay(self, *replay_inputs(scenario, pool))
+        inputs = replay_inputs(scenario, pool)
+        res, metrics = _replay(self, *inputs, self.plan(pool))
         return _shape_outcome(res, metrics, (pool_size(pool),))
 
     def replay_grid(self, scenarios, pool) -> ReplayOutcome:
@@ -276,7 +421,10 @@ class DrainEngine:
         device computation.  Fork f = s·P + p; outcome axes (S, P)."""
         pool = as_pool(pool)
         S = int(scenarios.total_nodes.shape[0])
-        res, metrics = _replay(self, *replay_inputs(scenarios, pool))
+        inputs = replay_inputs(scenarios, pool)
+        plan = self.plan(pool)                 # fork f = s·P + p
+        res, metrics = _replay(self, *inputs,
+                               plan * S if plan is not None else None)
         return _shape_outcome(res, metrics, (S, pool_size(pool)))
 
 
@@ -284,25 +432,31 @@ class DrainEngine:
 # Jitted implementations (engine static -> cached per configuration).
 # ----------------------------------------------------------------------
 
-def _drain_impl(engine: DrainEngine, states: SimState,
-                pool: EnginePool) -> DrainResult:
+def _drain_impl(engine: DrainEngine, states: SimState, pool: EnginePool,
+                plan: HoistPlan = None) -> DrainResult:
+    # Mid-drain, no new jobs appear: only slots queued at entry can
+    # ever be queued — the tightest hoist domain.
+    order_fn = make_order_fn(states, pool, plan,
+                             ever_queued=states.jobs.state == QUEUED)
     return simulate_to_drain_batched(
-        states,
-        lambda st: batched_priority_order(st, pool),
-        engine.pass_fn())
+        states, order_fn, engine.pass_fn(),
+        dynamic_bounds=engine.dynamic_bounds)
 
 
-@functools.partial(jax.jit, static_argnames=("engine",))
+@_quiet_donation
+@functools.partial(jax.jit, static_argnames=("engine", "plan"),
+                   donate_argnames=("states",))
 def _drain(engine: DrainEngine, states: SimState,
-           pool: EnginePool) -> DrainResult:
-    return _drain_impl(engine, states, pool)
+           pool: EnginePool, plan: HoistPlan = None) -> DrainResult:
+    return _drain_impl(engine, states, pool, plan)
 
 
 def _decide_impl(engine: DrainEngine, state: SimState, pool: EnginePool,
-                 weights: scoring.ScoreWeights) -> Decision:
+                 weights: scoring.ScoreWeights,
+                 plan: HoistPlan = None) -> Decision:
     k = pool_size(pool)
     eval_mask = state.jobs.state == QUEUED
-    res = _drain_impl(engine, broadcast_state(state, k), pool)
+    res = _drain_impl(engine, broadcast_state(state, k), pool, plan)
     metrics = jax.vmap(drain_metrics, in_axes=(0, None))(res, eval_mask)
     costs = scoring.policy_cost(metrics, weights)
     costs = jnp.where(res.deadlocked, jnp.inf, costs)
@@ -316,17 +470,20 @@ def _decide_impl(engine: DrainEngine, state: SimState, pool: EnginePool,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("engine", "weights"))
+@functools.partial(jax.jit, static_argnames=("engine", "weights", "plan"))
 def _decide(engine: DrainEngine, state: SimState, pool: EnginePool,
-            weights: scoring.ScoreWeights) -> Decision:
-    return _decide_impl(engine, state, pool, weights)
+            weights: scoring.ScoreWeights,
+            plan: HoistPlan = None) -> Decision:
+    return _decide_impl(engine, state, pool, weights, plan)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("engine", "n_ens", "noise", "weights"))
+                   static_argnames=("engine", "n_ens", "noise", "weights",
+                                    "plan"))
 def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
                      key: jax.Array, n_ens: int, noise: float,
-                     weights: scoring.ScoreWeights) -> Decision:
+                     weights: scoring.ScoreWeights,
+                     plan: HoistPlan = None) -> Decision:
     """k * n_ens forks ride ONE batch axis through ONE drain.
 
     Fork f = e * k + p simulates policy ``pool[p]`` under ensemble
@@ -346,9 +503,10 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
     states = broadcast_state(state, n_ens * k)
     states = states._replace(jobs=states.jobs._replace(est_runtime=est_b))
     pool_b = tile_pool(pool, n_ens)
+    plan_b = plan * n_ens if plan is not None else None
 
     eval_mask = state.jobs.state == QUEUED
-    res = _drain_impl(engine, states, pool_b)
+    res = _drain_impl(engine, states, pool_b, plan_b)
     metrics = jax.vmap(drain_metrics, in_axes=(0, None))(res, eval_mask)
     mean_metrics = jax.tree.map(
         lambda x: jnp.mean(x.reshape(n_ens, k), axis=0), metrics)
@@ -369,6 +527,36 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
 # Scenario-vectorized replay (DESIGN.md §6).
 # ----------------------------------------------------------------------
 
+@functools.partial(jax.jit, static_argnames=("P",))
+def _tiled_replay_inputs(submit, nodes, est, true_rt, valid, totals,
+                         pool: EnginePool, P: int):
+    """The tiling proper, jitted so the ~10 repeat/fill ops fuse into
+    one dispatch (eager per-op dispatch used to cost as much as the
+    replay itself at small S·P)."""
+    rep = lambda x: jnp.repeat(x, P, axis=0)
+    submit = rep(submit)                                    # (S*P, J)
+    valid = rep(valid)
+    k, J = submit.shape
+    # distinct buffers per leaf (no aliasing): ``states`` is DONATED to
+    # the jitted replay, and XLA rejects donating one buffer twice
+    none = lambda: jnp.full((k, J), TIME_NONE, dtype=jnp.float32)
+    jobs = JobTable(
+        submit_t=submit,
+        nodes=rep(nodes),
+        est_runtime=rep(est),
+        start_t=none(),
+        end_t=none(),
+        state=jnp.zeros((k, J), dtype=jnp.int32),           # INVALID
+    )
+    states = SimState(jobs=jobs,
+                      free_nodes=rep(totals),
+                      total_nodes=rep(totals),
+                      now=jnp.zeros((k,), dtype=jnp.float32))
+    arrival_t = jnp.where(valid, submit, jnp.inf)
+    S = totals.shape[0]
+    return states, arrival_t, rep(true_rt), tile_pool(pool, S), valid
+
+
 def replay_inputs(scenarios, pool: EnginePool):
     """Device inputs for the flat (k = S·P) replay batch from a
     ``workload.ScenarioSet``-shaped object: scenario rows repeat P times
@@ -377,43 +565,41 @@ def replay_inputs(scenarios, pool: EnginePool):
     replay reaches them.  Shared by ``DrainEngine.replay_grid`` and
     ``whatif.sharded_replay_grid`` (which shards the leading axis)."""
     P = pool_size(pool)
-    rep = lambda x, dt: jnp.repeat(jnp.asarray(x, dtype=dt), P, axis=0)
-    submit = rep(scenarios.submit_t, jnp.float32)           # (S*P, J)
-    valid = rep(scenarios.valid, bool)
-    k, J = submit.shape
-    none = jnp.full((k, J), TIME_NONE, dtype=jnp.float32)
-    jobs = JobTable(
-        submit_t=submit,
-        nodes=rep(scenarios.nodes, jnp.int32),
-        est_runtime=rep(scenarios.est_runtime, jnp.float32),
-        start_t=none,
-        end_t=none,
-        state=jnp.zeros((k, J), dtype=jnp.int32),           # INVALID
-    )
-    total = rep(scenarios.total_nodes, jnp.int32)           # (S*P,)
-    states = SimState(jobs=jobs, free_nodes=total, total_nodes=total,
-                      now=jnp.zeros((k,), dtype=jnp.float32))
-    arrival_t = jnp.where(valid, submit, jnp.inf)
-    true_rt = rep(scenarios.true_runtime, jnp.float32)
-    S = int(scenarios.total_nodes.shape[0])
-    return states, arrival_t, true_rt, tile_pool(pool, S), valid
+    cvt = lambda x, dt: jnp.asarray(x, dtype=dt)
+    return _tiled_replay_inputs(
+        cvt(scenarios.submit_t, jnp.float32),
+        cvt(scenarios.nodes, jnp.int32),
+        cvt(scenarios.est_runtime, jnp.float32),
+        cvt(scenarios.true_runtime, jnp.float32),
+        cvt(scenarios.valid, bool),
+        cvt(scenarios.total_nodes, jnp.int32),
+        pool, P)
 
 
 def _replay_impl(engine: DrainEngine, states: SimState,
                  arrival_t: jax.Array, true_rt: jax.Array,
-                 pool: EnginePool, valid: jax.Array):
+                 pool: EnginePool, valid: jax.Array,
+                 plan: HoistPlan = None):
+    # Every slot with a finite arrival will be queued at some point
+    # (plus any slot already queued at entry): the hoist domain.
+    ever_queued = jnp.isfinite(arrival_t) | (states.jobs.state == QUEUED)
+    order_fn = make_order_fn(states, pool, plan, ever_queued=ever_queued)
     res = simulate_replay_batched(
-        states, arrival_t, true_rt,
-        lambda st: batched_priority_order(st, pool),
-        engine.pass_fn())
+        states, arrival_t, true_rt, order_fn, engine.pass_fn(),
+        dynamic_bounds=engine.dynamic_bounds,
+        elide_empty=engine.elide_empty)
     metrics = jax.vmap(state_metrics)(res.state, valid, true_rt)
     return res, metrics
 
 
-@functools.partial(jax.jit, static_argnames=("engine",))
+@_quiet_donation
+@functools.partial(jax.jit, static_argnames=("engine", "plan"),
+                   donate_argnames=("states",))
 def _replay(engine: DrainEngine, states: SimState, arrival_t: jax.Array,
-            true_rt: jax.Array, pool: EnginePool, valid: jax.Array):
-    return _replay_impl(engine, states, arrival_t, true_rt, pool, valid)
+            true_rt: jax.Array, pool: EnginePool, valid: jax.Array,
+            plan: HoistPlan = None):
+    return _replay_impl(engine, states, arrival_t, true_rt, pool, valid,
+                        plan)
 
 
 def _shape_outcome(res: ReplayResult, metrics: DrainMetrics,
@@ -432,9 +618,12 @@ def _shape_outcome(res: ReplayResult, metrics: DrainMetrics,
 @functools.partial(jax.jit, static_argnames=("engine",))
 def _single_pass(engine: DrainEngine, state: SimState,
                  pool: EnginePool) -> jax.Array:
+    # The emulator's per-event oracle path: deliberately uncompacted
+    # (full static rank bound, fresh sort) — it is what the compacted
+    # loops are parity-tested against.
     states = broadcast_state(state, 1)
     order = batched_priority_order(states, pool)
-    return engine.pass_fn()(states, order)[0]
+    return engine.pass_fn()(states, order, None)[0]
 
 
 DEFAULT_ENGINE = DrainEngine(backend="reference")

@@ -216,6 +216,46 @@ def batched_priority_keys(jobs: JobTable, now: jax.Array,
 
 
 # ----------------------------------------------------------------------
+# Time-invariance: which forks' keys never depend on ``now``?
+# ----------------------------------------------------------------------
+
+#: Legacy ids whose key is a pure function of static job fields
+#: (submit_t / est / nodes) — WFP, LXF and EXPF re-score with the
+#: current wait time every cycle and are excluded.
+STATIC_KEY_IDS = frozenset({FCFS, SJF, SAF, LJF})
+
+_WAIT_COL = FEATURES.index("wait")
+_XF_COL = FEATURES.index("xfactor")
+
+
+def time_invariant_mask(pool) -> np.ndarray:
+    """Host-side (k,) bool: forks whose priority keys are independent
+    of the clock, so their argsort can be hoisted OUT of the per-event
+    loop (DESIGN.md §7).
+
+    A fork qualifies iff its key is a function of static job fields
+    only (``submit_t``/``est``/``nodes``/``area``):
+
+    * ``lin``-family specs with zero weight on the ``wait`` and
+      ``xfactor`` feature columns (FCFS, SJF, SAF, LJF and most learned
+      scorers sit here);
+    * legacy ids in ``STATIC_KEY_IDS``.
+
+    ``wfp``/``expf`` family forks always re-score with the current wait
+    time, so they stay time-varying regardless of θ.  The mask is a
+    *host* computation over concrete pool arrays — it partitions the
+    fork axis statically, before jit."""
+    if isinstance(pool, PolicySpec):
+        fam = np.asarray(pool.family).reshape(-1)
+        th = np.asarray(pool.theta).reshape(fam.shape[0], -1)
+        return ((fam == FAM_LIN)
+                & (th[:, _WAIT_COL] == 0.0)
+                & (th[:, _XF_COL] == 0.0))
+    ids = np.asarray(pool).reshape(-1)
+    return np.isin(ids, sorted(STATIC_KEY_IDS))
+
+
+# ----------------------------------------------------------------------
 # Spec constructors: families and the 7 static fixed points.
 # ----------------------------------------------------------------------
 

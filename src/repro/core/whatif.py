@@ -143,6 +143,13 @@ def sharded_whatif(mesh: Mesh, axis: str = "data",
     θ matrix (k, P) is partitioned on its fork axis together with the
     family vector: a 128-point parameter sweep splits across devices
     exactly like 128 distinct policies.
+
+    Static-key hoisting (DESIGN.md §7) is disabled on sharded paths:
+    the hoist gather/scatter would regroup the fork axis across shards
+    (cross-device collectives per event).  Dynamic pass bounds stay on
+    — the rank-limit max is the same kind of lock-step all-reduce the
+    loop condition already performs.  Results are bit-identical either
+    way (tests assert sharded == local).
     """
     from repro.core.engine import _decide_impl  # the unjitted body
 
@@ -172,6 +179,9 @@ def sharded_replay_grid(mesh: Mesh, axis: str = "data",
     device — scenarios are the unit of partition, the natural layout
     for multi-host what-if farms (each host replays its own futures).
     Requires the scenario count S to be divisible by the axis size.
+    As with ``sharded_whatif``, static-key hoisting is disabled here
+    (its fork-axis regrouping fights the sharding); dynamic bounds and
+    pass elision stay on and results remain bit-identical.
 
     Returns a function ``(scenarios: workload.ScenarioSet, pool) ->
     ReplayOutcome`` with the same semantics as ``replay_grid``.

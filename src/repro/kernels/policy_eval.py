@@ -39,6 +39,12 @@ Inputs (policy axis k leading where applicable):
   run_nodes (J,)   f32   — nodes held by RUNNING jobs else 0
   free0     (1, 1) f32   — free nodes now
   now       (1, 1) f32   — current time
+  limit     (1, 1) i32   — rank bound for both sequential loops: ranks
+                           in [limit, J) hold no queued slot, so the
+                           greedy and backfill ``fori_loop``s stop there
+                           (a dynamic trip count — supported by Mosaic;
+                           bit-exact, see DESIGN.md §7).  Callers pass
+                           J to disable.
 
 Outputs:
   started (k, J) i32 — jobs started by this pass under each policy
@@ -58,7 +64,7 @@ BIG = 3.0e38  # ~f32 inf stand-in (pallas-friendly)
 
 def _pass_kernel(order_ref, queued_ref, nodes_ref, est_ref,
                  run_end_ref, run_nodes_ref, free_ref, now_ref,
-                 started_ref, free_out_ref):
+                 limit_ref, started_ref, free_out_ref):
     """One scheduling pass for ONE policy (grid dim 0 = policy)."""
     order = order_ref[0, :]          # (J,) i32 priority-ranked job ids
     queued = queued_ref[0, :]        # (J,) i32
@@ -69,6 +75,9 @@ def _pass_kernel(order_ref, queued_ref, nodes_ref, est_ref,
     free0 = free_ref[0, 0]
     now = now_ref[0, 0]
     j_cap = order.shape[0]
+    # rank bound: ranks >= limit hold no queued slot -> provable no-ops
+    # in both sequential loops below (truncation is bit-exact)
+    limit = jnp.minimum(limit_ref[0, 0], j_cap)
 
     q_nodes = jnp.where(queued > 0, nodes, BIG)  # invalid jobs never fit
 
@@ -89,7 +98,7 @@ def _pass_kernel(order_ref, queued_ref, nodes_ref, est_ref,
 
     started0 = jnp.zeros((j_cap,), dtype=jnp.int32)
     free1, head_rank, started1 = jax.lax.fori_loop(
-        0, j_cap, greedy, (free0, jnp.int32(-1), started0))
+        0, limit, greedy, (free0, jnp.int32(-1), started0))
 
     head = order[jnp.maximum(head_rank, 0)]
     has_head = head_rank >= 0
@@ -126,11 +135,21 @@ def _pass_kernel(order_ref, queued_ref, nodes_ref, est_ref,
         started = jnp.where(start, started.at[j].set(1), started)
         return free, extra, started
 
+    # ranks <= head_rank cannot backfill (started in pass 1, or the head
+    # itself); no head -> nothing left to backfill at all
+    back_lo = jnp.where(head_rank >= 0, head_rank + 1, limit)
     free2, _, started = jax.lax.fori_loop(
-        0, j_cap, backfill, (free1, extra, started1))
+        back_lo, limit, backfill, (free1, extra, started1))
 
     started_ref[0, :] = started
     free_out_ref[0, 0] = free2
+
+
+def _limit_arr(limit, j_cap: int) -> jax.Array:
+    """(1, 1) i32 rank bound; ``None`` -> the full static bound J."""
+    if limit is None:
+        limit = j_cap
+    return jnp.asarray(limit, dtype=jnp.int32).reshape(1, 1)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -138,11 +157,14 @@ def policy_eval_pass(order: jax.Array, queued: jax.Array,
                      nodes: jax.Array, est: jax.Array,
                      run_end: jax.Array, run_nodes: jax.Array,
                      free0: jax.Array, now: jax.Array,
+                     limit: jax.Array | None = None,
                      *, interpret: bool = True):
     """Batched scheduling pass: ``order`` is (k, J); the rest (J,).
 
     Returns (started (k, J) i32, free (k,) f32).  ``interpret=True``
     runs the kernel body on CPU (this container); on TPU pass False.
+    ``limit`` (i32 scalar, shared by all programs) truncates the
+    sequential rank loops; None scans all J ranks.
     """
     k, j_cap = order.shape
     f32 = jnp.float32
@@ -155,7 +177,7 @@ def policy_eval_pass(order: jax.Array, queued: jax.Array,
         _pass_kernel,
         grid=(k,),
         in_specs=[per_policy(), shared(), shared(), shared(), shared(),
-                  shared(), scalar(), scalar()],
+                  shared(), scalar(), scalar(), scalar()],
         out_specs=[per_policy(), pl.BlockSpec((1, 1), lambda p: (p, 0))],
         out_shape=[
             jax.ShapeDtypeStruct((k, j_cap), jnp.int32),
@@ -169,7 +191,8 @@ def policy_eval_pass(order: jax.Array, queued: jax.Array,
       run_end.reshape(1, j_cap).astype(f32),
       run_nodes.reshape(1, j_cap).astype(f32),
       free0.reshape(1, 1).astype(f32),
-      now.reshape(1, 1).astype(f32))
+      now.reshape(1, 1).astype(f32),
+      _limit_arr(limit, j_cap))
     return started, free[:, 0]
 
 
@@ -178,6 +201,7 @@ def policy_eval_pass_batched(order: jax.Array, queued: jax.Array,
                              nodes: jax.Array, est: jax.Array,
                              run_end: jax.Array, run_nodes: jax.Array,
                              free0: jax.Array, now: jax.Array,
+                             limit: jax.Array | None = None,
                              *, interpret: bool = True):
     """Fully policy-batched scheduling pass: ALL inputs are (k, J)
     (``free0``/``now`` are (k,)) — one grid program per fork, each
@@ -185,18 +209,22 @@ def policy_eval_pass_batched(order: jax.Array, queued: jax.Array,
     states have diverged (different jobs running, different clocks,
     ensemble-perturbed estimates).
 
-    Returns (started (k, J) i32, free (k,) f32).
+    Returns (started (k, J) i32, free (k,) f32).  ``limit`` (i32
+    scalar, shared by the grid — the engine's ``pass_rank_limit``)
+    truncates the sequential rank loops; None scans all J ranks.
     """
     k, j_cap = order.shape
     f32 = jnp.float32
 
     per_policy = lambda: pl.BlockSpec((1, j_cap), lambda p: (p, 0))  # noqa: E731
     per_scalar = lambda: pl.BlockSpec((1, 1), lambda p: (p, 0))  # noqa: E731
+    shared_scalar = lambda: pl.BlockSpec((1, 1), lambda p: (0, 0))  # noqa: E731
 
     started, free = pl.pallas_call(
         _pass_kernel,
         grid=(k,),
-        in_specs=[per_policy()] * 6 + [per_scalar(), per_scalar()],
+        in_specs=[per_policy()] * 6 + [per_scalar(), per_scalar(),
+                                       shared_scalar()],
         out_specs=[per_policy(), per_scalar()],
         out_shape=[
             jax.ShapeDtypeStruct((k, j_cap), jnp.int32),
@@ -210,5 +238,6 @@ def policy_eval_pass_batched(order: jax.Array, queued: jax.Array,
       run_end.astype(f32),
       run_nodes.astype(f32),
       free0.reshape(k, 1).astype(f32),
-      now.reshape(k, 1).astype(f32))
+      now.reshape(k, 1).astype(f32),
+      _limit_arr(limit, j_cap))
     return started, free[:, 0]

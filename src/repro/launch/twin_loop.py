@@ -69,6 +69,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", choices=("paper", "poisson", "bursty"),
                     default="paper")
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="skip the persistent XLA compilation cache "
+                         "(default: cache compiled engines under "
+                         "~/.cache/repro-jax-cache so the ~1.5 s replay "
+                         "compile is paid once per machine)")
     ap.add_argument("--jobs", type=int, default=150)
     ap.add_argument("--nodes", type=int, default=32)
     ap.add_argument("--pool", default="paper",
@@ -93,6 +98,8 @@ def main() -> None:
         ap.error("--replay-grid evaluates static baselines; --failures "
                  "and --ensemble do not apply (run the co-simulation "
                  "for those)")
+    from repro.launch.cache import enable_persistent_cache
+    enable_persistent_cache(enabled=not args.no_compile_cache)
     engine = DrainEngine(backend=args.backend)
     pool = parse_pool(args.pool)
     print(f"pool: k={len(pool)} forks "

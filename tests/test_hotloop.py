@@ -1,0 +1,231 @@
+"""Hot-loop compaction (DESIGN.md §7): bit-identity of the compacted
+engine paths against the PR-3-equivalent configuration.
+
+The compaction knobs — dynamic pass bounds, static-key hoisting, pass
+elision — must be pure speedups: every knob combination produces
+bit-for-bit the same replays, drains and decisions as the all-off
+configuration (the PR-3 loop shape), under both pass backends,
+including adversarial shapes (queue depth == J, mixed
+time-invariant/time-varying pools, all-static pools with zero per-event
+sorting).
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policies
+from repro.core.engine import DrainEngine, hoist_plan
+from repro.core.policies import (EXTENDED_POOL, FCFS, LJF, SAF, SJF, WFP,
+                                 parse_pool, time_invariant_mask)
+from repro.cluster.workload import (JobSpec, bursty_trace, make_scenario,
+                                    poisson_trace, stack_scenarios)
+
+from conftest import make_cluster_state
+
+POOL = jnp.asarray(EXTENDED_POOL, dtype=jnp.int32)
+MAX_JOBS = 64
+
+COMPACT = {
+    "reference": DrainEngine("reference"),
+    "pallas": DrainEngine("pallas", interpret=True),
+}
+PR3 = {
+    name: DrainEngine(eng.backend, interpret=eng.interpret,
+                      dynamic_bounds=False, hoist_static=False,
+                      elide_empty=False)
+    for name, eng in COMPACT.items()
+}
+
+
+def random_traces(n_traces, n_jobs=20, total_nodes=16):
+    """Same trace family as tests/test_replay.py (6 traces x the
+    7-policy pool = the 42 parity combos)."""
+    out = []
+    for i in range(n_traces):
+        gen = bursty_trace if i % 2 else poisson_trace
+        out.append(gen(n_jobs, total_nodes, 4.0 + i, (1, total_nodes - 4),
+                       (30.0, 400.0), seed=100 + i))
+    return out
+
+
+def _assert_replay_identical(a, b, ctx=""):
+    np.testing.assert_array_equal(np.asarray(a.start_t),
+                                  np.asarray(b.start_t), err_msg=ctx)
+    np.testing.assert_array_equal(np.asarray(a.end_t),
+                                  np.asarray(b.end_t), err_msg=ctx)
+    np.testing.assert_array_equal(np.asarray(a.deadlocked),
+                                  np.asarray(b.deadlocked), err_msg=ctx)
+    np.testing.assert_array_equal(np.asarray(a.events),
+                                  np.asarray(b.events), err_msg=ctx)
+
+
+def _assert_decisions_identical(da, db, ctx=""):
+    assert int(da.policy_index) == int(db.policy_index), ctx
+    np.testing.assert_array_equal(np.asarray(da.run_mask),
+                                  np.asarray(db.run_mask), err_msg=ctx)
+    np.testing.assert_array_equal(np.asarray(da.costs),
+                                  np.asarray(db.costs), err_msg=ctx)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_replay_compaction_bit_identity_42_combos(backend):
+    """6 traces x 7 policies per backend: the fully-compacted replay is
+    bit-identical to the PR-3-equivalent (all knobs off) replay."""
+    for i, trace in enumerate(random_traces(6)):
+        scen = make_scenario(trace, 16, max_jobs=MAX_JOBS)
+        _assert_replay_identical(
+            COMPACT[backend].replay(scen, POOL),
+            PR3[backend].replay(scen, POOL),
+            ctx=f"backend={backend} trace={i}")
+
+
+def test_every_knob_combination_identical():
+    """All 8 knob combinations agree — no pairwise interaction between
+    bounds, hoisting and elision breaks exactness."""
+    trace = poisson_trace(24, 16, 5.0, (1, 12), (30.0, 300.0), seed=11)
+    scen = make_scenario(trace, 16, max_jobs=32)
+    ref = None
+    for db, hs, ee in itertools.product((False, True), repeat=3):
+        eng = DrainEngine("reference", dynamic_bounds=db, hoist_static=hs,
+                          elide_empty=ee)
+        out = eng.replay(scen, POOL)
+        if ref is None:
+            ref = out
+        else:
+            _assert_replay_identical(ref, out,
+                                     ctx=f"bounds={db} hoist={hs} "
+                                         f"elide={ee}")
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_deep_queue_bounds_degrade_to_full_loop(backend):
+    """Adversarial: every job demands the whole cluster, so after the
+    arrival burst the queue holds J-1 jobs while one runs — the dynamic
+    rank bound sits at ~J (no truncation headroom) and must still be
+    bit-exact, serializing all J jobs."""
+    J = 24
+    trace = [JobSpec(j, round(0.5 * j, 3), 8, 120.0 + j, 100.0 + j, "t")
+             for j in range(J)]
+    scen = make_scenario(trace, 8, max_jobs=J)   # max_jobs == len(trace)
+    a = COMPACT[backend].replay(scen, POOL)
+    b = PR3[backend].replay(scen, POOL)
+    _assert_replay_identical(a, b, ctx=f"deep queue {backend}")
+    # fully serialized: every fork retires one job at a time
+    ends = np.sort(np.asarray(a.end_t)[0])
+    assert (np.diff(ends) > 0).all()
+
+
+def test_drain_queue_depth_equals_capacity():
+    """Drain-side adversarial shape: queued count == J exactly (every
+    slot queued, nothing running) — ``pass_rank_limit`` equals the full
+    static bound and the compacted drain must match the uncompacted."""
+    state = make_cluster_state(max_jobs=16, total_nodes=8, n_queued=16,
+                               n_running=0, seed=3)
+    assert int((state.jobs.state == 1).sum()) == 16
+    for backend in ("reference", "pallas"):
+        _assert_decisions_identical(
+            COMPACT[backend].decide(state, POOL),
+            PR3[backend].decide(state, POOL),
+            ctx=f"deep drain {backend}")
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_mixed_static_and_time_varying_pool(backend):
+    """A pool mixing hoistable (lin-family / static ids) and
+    time-varying (wfp/expf) forks exercises the gather/sort/merge path:
+    replay and decide both bit-identical to the uncompacted engine."""
+    pool = parse_pool(
+        "extended,wfp:a=1..2x2,lin:est=1:wait=-0.01,expf:tau=600").spec
+    mask = time_invariant_mask(pool)
+    assert mask.any() and (~mask).any()      # genuinely mixed
+    trace = poisson_trace(20, 16, 5.0, (1, 12), (30.0, 300.0), seed=21)
+    scen = make_scenario(trace, 16, max_jobs=32)
+    _assert_replay_identical(COMPACT[backend].replay(scen, pool),
+                             PR3[backend].replay(scen, pool),
+                             ctx=f"mixed pool replay {backend}")
+    state = make_cluster_state(max_jobs=32, seed=5)
+    _assert_decisions_identical(COMPACT[backend].decide(state, pool),
+                                PR3[backend].decide(state, pool),
+                                ctx=f"mixed pool decide {backend}")
+
+
+def test_all_static_pool_zero_per_event_sort():
+    """An all-hoistable pool takes the constant-order path (no per-event
+    argsort at all) and still matches the uncompacted engine."""
+    pool = jnp.asarray([FCFS, SJF, SAF, LJF], dtype=jnp.int32)
+    assert time_invariant_mask(pool).all()
+    trace = bursty_trace(22, 16, 5.0, (1, 10), (30.0, 300.0), seed=31)
+    scen = make_scenario(trace, 16, max_jobs=32)
+    _assert_replay_identical(COMPACT["reference"].replay(scen, pool),
+                             PR3["reference"].replay(scen, pool),
+                             ctx="all-static pool")
+
+
+def test_time_invariant_mask():
+    """The hoist predicate: static ids FCFS/SJF/SAF/LJF qualify; the
+    wait-rescoring WFP/LXF/EXPF never do; lin specs qualify iff their
+    wait and xfactor weights are zero."""
+    ids = np.asarray(time_invariant_mask(POOL))
+    by_id = dict(zip(EXTENDED_POOL, ids))
+    assert by_id[FCFS] and by_id[SJF] and by_id[SAF] and by_id[LJF]
+    assert not by_id[WFP]
+    spec = policies.stack_specs([
+        policies.linear_spec(est=1.0),                  # SJF: hoistable
+        policies.linear_spec(est=1.0, wait=-0.01),      # wait weight: no
+        policies.linear_spec(area=1.0, xfactor=0.5),    # xfactor: no
+        policies.wfp_spec(a=2.0),                       # family: no
+        policies.exp_spec(tau=600.0),                   # family: no
+    ])
+    assert list(time_invariant_mask(spec)) == [True, False, False,
+                                               False, False]
+    # parity between representations: ids == their spec fixed points
+    spec_pool = policies.PolicyPool.from_ids(EXTENDED_POOL).spec
+    np.testing.assert_array_equal(time_invariant_mask(spec_pool), ids)
+
+
+def test_hoist_plan_gating():
+    assert hoist_plan(POOL) == tuple(bool(b)
+                                     for b in time_invariant_mask(POOL))
+    assert hoist_plan(POOL, enabled=False) is None
+    # no hoistable fork -> no plan (skip the gather/merge machinery)
+    assert hoist_plan(jnp.asarray([WFP], dtype=jnp.int32)) is None
+
+
+def test_elision_fires_on_sparse_trace_and_counts_recorded():
+    """A sparse trace (long gaps, queue usually empty) elides passes on
+    completion-only iterations: pass_invocations < iters, while a
+    knobs-off engine runs one pass every iteration.  Results stay
+    bit-identical."""
+    trace = [JobSpec(j, 1000.0 * j, 2, 60.0, 50.0, "t")
+             for j in range(8)]
+    scen = make_scenario(trace, 16, max_jobs=16)
+    a = COMPACT["reference"].replay(scen, POOL)
+    b = PR3["reference"].replay(scen, POOL)
+    _assert_replay_identical(a, b, ctx="sparse")
+    passes = int(a.result.pass_invocations)
+    iters = int(a.result.iters)
+    assert passes < iters, "elision never fired on a sparse trace"
+    assert int(b.result.pass_invocations) == int(b.result.iters)
+    # drain counters: one pass per lock-step iteration
+    state = make_cluster_state(max_jobs=32, seed=9)
+    res = COMPACT["reference"].drain(state, POOL)
+    assert (np.asarray(res.pass_invocations) >= 1).all()
+
+
+def test_ensemble_and_grid_compaction_identity():
+    """The tiled-fork paths (ensemble members, scenario grids) tile the
+    hoist plan with the pool — both stay bit-identical."""
+    import jax
+    state = make_cluster_state(max_jobs=32, seed=13)
+    key = jax.random.PRNGKey(0)
+    da = COMPACT["reference"].decide_ensemble(state, POOL, key, n_ens=3)
+    db = PR3["reference"].decide_ensemble(state, POOL, key, n_ens=3)
+    _assert_decisions_identical(da, db, ctx="ensemble")
+
+    traces = random_traces(3, n_jobs=12)
+    scen = stack_scenarios(traces, 16, max_jobs=32)
+    _assert_replay_identical(COMPACT["reference"].replay_grid(scen, POOL),
+                             PR3["reference"].replay_grid(scen, POOL),
+                             ctx="grid")
