@@ -60,6 +60,20 @@ def main(seed: int = 0) -> List[str]:
         f"figure3_radar,summary,best={best},second={second},"
         f"area_gain_pct={gain:.1f},paper_gain_pct=11.4,"
         f"wall_s={time.perf_counter() - t0:.1f}")
+
+    # what-if radar over the twin's RECORDED objective breakdown
+    # (Telemetry.objective_breakdown — per-term costs computed on
+    # device each cycle, DESIGN.md §8): no host-side recompute of the
+    # score terms.  Every term is a cost, so cost_axes == axes.
+    breakdown = twin.telemetry.objective_breakdown()
+    if breakdown:
+        terms = tuple(next(iter(breakdown.values())))
+        bd_areas = radar_report(breakdown, axes=terms, cost_axes=terms)
+        lines.append(
+            "figure3_radar,whatif_breakdown,"
+            + f"objective={twin.telemetry.cycles[0].objective},"
+            + ",".join(f"{n}_area={bd_areas[n]:.3f}"
+                       for n in sorted(bd_areas)))
     return lines
 
 

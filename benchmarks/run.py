@@ -4,26 +4,47 @@ Prints ``name,key=value,...`` CSV lines.  ``python -m benchmarks.run``
 runs everything; pass benchmark names to run a subset, e.g.
 ``python -m benchmarks.run figure3_radar overhead``.
 
+``--objective`` sets the administrator goal (``core.objective``
+grammar, DESIGN.md §8) for the goal-aware benchmarks (``adaptive``);
+it is round-trip validated and the resolved goal logged at startup.
+
 ``--no-compile-cache`` skips the persistent XLA compilation cache
 (enabled by default so repeat benchmark invocations start from warm
 HLO; disable it when measuring cold-compile latency itself).
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 
 def main() -> None:
-    args = sys.argv[1:]
-    use_cache = "--no-compile-cache" not in args
-    args = [a for a in args if a != "--no-compile-cache"]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("benchmarks", nargs="*",
+                    help="benchmark names to run (default: all)")
+    ap.add_argument("--no-compile-cache", action="store_true")
+    ap.add_argument("--objective", default=None,
+                    help="objective grammar for goal-aware benchmarks "
+                         "(default: each benchmark's own goal set); "
+                         "e.g. 'score', 'avg_wait', "
+                         "'min:avg_wait@util>=0.85'")
+    args = ap.parse_args()
     from repro.launch.cache import enable_persistent_cache
-    enable_persistent_cache(enabled=use_cache)
+    enable_persistent_cache(enabled=not args.no_compile_cache)
 
-    from benchmarks import (baseline_sweep, bursty, figure1_jobdist,
-                            figure3_radar, overhead, roofline,
-                            table1_policy_dist)
+    objectives = None
+    if args.objective is not None:
+        from repro.core.objective import validate_objective
+        try:
+            goal = validate_objective(args.objective)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        print(f"objective: {goal} ({type(goal).__name__})")
+        objectives = (goal.spec,)
+
+    from benchmarks import (adaptive, baseline_sweep, bursty,
+                            figure1_jobdist, figure3_radar, overhead,
+                            roofline, table1_policy_dist)
     suite = {
         "figure1_jobdist": figure1_jobdist.main,
         "figure3_radar": figure3_radar.main,
@@ -32,8 +53,10 @@ def main() -> None:
         "roofline": roofline.main,
         "bursty": bursty.main,
         "baseline_sweep": baseline_sweep.main,
+        "adaptive": (lambda: adaptive.main(objectives=objectives)
+                     if objectives else adaptive.main()),
     }
-    chosen = args or list(suite)
+    chosen = args.benchmarks or list(suite)
     t0 = time.perf_counter()
     for name in chosen:
         if name not in suite:

@@ -27,11 +27,17 @@ for pid in (FCFS, WFP, SJF):
     per_policy[policy_name(pid)] = report.metric_dict()
 
 # --- a whole (scenario x policy) grid in one shot --------------------
-# S traces x the 7-policy pool: one batched replay, per-(s, p) metrics
+# S traces x the 7-policy pool: one batched replay, per-(s, p) metrics.
+# The objective (DESIGN.md §8) drives the per-scenario selection —
+# here: minimize avg wait subject to >= 70% utilization, with
+# feasibility fallback.  Try "avg_wait", "lex:avg_wait,makespan", ...
 scenarios = stack_scenarios([paper_synthetic_trace(seed=s)
                              for s in range(4)], total_nodes=32)
-grid = DrainEngine().replay_grid(scenarios, parse_pool("extended").spec)
+pool7 = parse_pool("extended")
+grid = DrainEngine().replay_grid(scenarios, pool7.spec,
+                                 "min:avg_wait@util>=0.7")
 print("grid avg_wait (S=4 x P=7):\n", np.asarray(grid.metrics.avg_wait))
+print("per-scenario picks:", [pool7.names[int(b)] for b in grid.best])
 
 # --- the twin: simulation-in-the-loop adaptive scheduling ------------
 # ``pool`` takes the sweep grammar (DESIGN.md §5): one what-if fork per
@@ -40,6 +46,11 @@ print("grid avg_wait (S=4 x P=7):\n", np.asarray(grid.metrics.avg_wait))
 # the same fork axis, e.g.
 #     pool="extended,wfp:a=1..5x5:tau=600..7200x5"   # k=32 forks
 #     pool="paper,expf:tau=600,lin:est=1:wait=-0.01" # custom scorers
+# ``objective`` is the administrator-configured goal (§3.4, DESIGN.md
+# §8) each decision cycle minimizes — "score" (the paper's 4-term
+# default), "avg_wait", "0.5*avg_wait+0.5*max_slowdown",
+# "min:avg_wait@util>=0.85", ... (see core.objective.parse_objective;
+# CLI: python -m repro.launch.twin_loop --objective avg_wait)
 bus = EventBus()
 emulator = ClusterEmulator(trace, total_nodes=32, bus=bus)
 twin = SchedTwin(bus=bus,
@@ -47,6 +58,7 @@ twin = SchedTwin(bus=bus,
                  total_nodes=32,
                  max_jobs=emulator.max_jobs,
                  pool="paper",
+                 objective="score",               # the paper's goal
                  free_nodes_probe=lambda: emulator.free_nodes)  # §3.2
 report = emulator.run(on_event=twin.pump)         # ①→⑦ loop per event
 per_policy["SchedTwin"] = report.metric_dict()

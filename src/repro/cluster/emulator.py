@@ -73,6 +73,16 @@ class RunReport:
     utilization: float
     n_events: int
     n_restarts: int = 0
+    # The administrator goal this run was evaluated under (grammar
+    # spec), stamped when ``run`` is given ``objective=``; scored
+    # through the SAME compiled cost semantics as device decisions.
+    # ``objective_cost`` is the scalar cost for elementwise goals
+    # (score/weighted) and None for rank-based goals (lex/constrained:
+    # a single candidate's composed rank is identically 0 — only the
+    # per-term values in ``objective_terms`` carry information).
+    objective: Optional[str] = None
+    objective_cost: Optional[float] = None
+    objective_terms: Optional[Dict[str, float]] = None
 
     def metric_dict(self) -> Dict[str, float]:
         return {
@@ -208,7 +218,8 @@ class ClusterEmulator:
     def run(self,
             policy_id=None,
             on_event: Optional[Callable[[], None]] = None,
-            fast: bool = False) -> RunReport:
+            fast: bool = False,
+            objective=None) -> RunReport:
         """Run the full trace.
 
         static mode: pass ``policy_id`` — a legacy integer id or a
@@ -221,9 +232,38 @@ class ClusterEmulator:
         fast path supports neither failures nor event-bus streaming.
         twin mode:   pass ``on_event`` = twin.pump (the co-simulation
         hook called after every published event).
+
+        ``objective`` (an ``objective.Objective`` or grammar string)
+        stamps the report with the run's cost under that goal
+        (``RunReport.objective`` / ``objective_cost``) — scheduling
+        itself is unaffected (static mode runs ONE fixed policy; twin
+        mode's goal lives on the ``SchedTwin``).
         """
         if (policy_id is None) == (on_event is None):
             raise ValueError("exactly one of policy_id / on_event required")
+        return self._stamp_objective(
+            self._run(policy_id, on_event, fast), objective)
+
+    def _stamp_objective(self, report: RunReport, objective) -> RunReport:
+        if objective is not None:
+            from repro.core.objective import (metrics_from_rows,
+                                              normalize_objective,
+                                              report_costs)
+            goal = normalize_objective(objective)
+            row = report.metric_dict()
+            report.objective = str(goal)
+            if goal.elementwise:
+                report.objective_cost = float(
+                    report_costs(goal, [row])[0])
+            report.objective_terms = {
+                term: float(v[0]) for term, v in
+                goal.cost_terms(metrics_from_rows([row])).items()}
+        return report
+
+    def _run(self,
+             policy_id,
+             on_event: Optional[Callable[[], None]],
+             fast: bool) -> RunReport:
         if fast:
             if policy_id is None:
                 raise ValueError("fast=True requires static mode")

@@ -5,9 +5,10 @@ import dataclasses
 from typing import Optional, Tuple, Union
 
 from repro.core.engine import DrainEngine
+from repro.core.objective import Objective, resolve_goal
 from repro.core.policies import (EXTENDED_POOL, PAPER_POOL, PolicyPool,
                                  normalize_pool)
-from repro.core.scoring import PAPER_WEIGHTS, ScoreWeights
+from repro.core.scoring import ScoreWeights
 
 #: DRAS-style 25-point sweep (5x5 grid over the WFP exponent and the
 #: aging timescale) riding alongside the 7 static specs -> k=32 forks
@@ -25,7 +26,16 @@ class TwinConfig:
     # parametric fixed points) or a sweep-grammar string such as
     # ``"paper"`` or ``DRAS_SWEEP_POOL`` (see policies.parse_pool).
     pool: Union[str, Tuple[int, ...]] = tuple(PAPER_POOL)  # WFP, FCFS, SJF
-    weights: ScoreWeights = PAPER_WEIGHTS          # 0.25 * each term
+    # The administrator-configured optimization goal (§3.4; DESIGN.md
+    # §8): an objective-grammar string ("score", "avg_wait",
+    # "min:avg_wait@util>=0.85", ...) or an ``objective.Objective``.
+    # "score" is the paper's 4-term score, bit-identical to the
+    # pre-objective ScoreWeights path.
+    objective: Union[str, Objective] = "score"
+    # DEPRECATED: legacy goal spelling.  When set, it lifts to the
+    # bit-identical paper-score objective (with a DeprecationWarning)
+    # and must not be combined with a non-default ``objective``.
+    weights: Optional[ScoreWeights] = None
     ensemble: int = 1                 # >1 -> uncertainty ensemble (beyond)
     ensemble_noise: float = 0.3
     trace_seed: int = 0
@@ -45,6 +55,12 @@ class TwinConfig:
     def make_pool(self) -> PolicyPool:
         """The parametric candidate pool this config describes."""
         return normalize_pool(self.pool)
+
+    def make_objective(self) -> Objective:
+        """The resolved optimization goal (legacy ``weights`` lifted)."""
+        if self.weights is not None and self.objective == "score":
+            return resolve_goal(None, self.weights)   # legacy spelling
+        return resolve_goal(self.objective, self.weights)
 
 
 PAPER_TWIN = TwinConfig()
@@ -69,6 +85,8 @@ class ReplayGridConfig:
     node_range: Tuple[int, int] = (1, 16)
     walltime_range: Tuple[float, float] = (30.0, 900.0)
     pool: Union[str, Tuple[int, ...]] = tuple(EXTENDED_POOL)   # P=7
+    # Goal for the grid's per-scenario selection (``ReplayOutcome.best``)
+    objective: Union[str, Objective] = "score"
     seed: int = 0
     backend: str = "auto"
     interpret: Optional[bool] = None
@@ -78,6 +96,9 @@ class ReplayGridConfig:
 
     def make_pool(self) -> PolicyPool:
         return normalize_pool(self.pool)
+
+    def make_objective(self) -> Objective:
+        return resolve_goal(self.objective)
 
     def make_traces(self):
         """One trace per scenario: the same family, consecutive seeds —

@@ -18,6 +18,13 @@ from repro.core.des import (DrainMetrics, DrainResult, ReplayResult,
 from repro.core.scoring import (PAPER_WEIGHTS, ScoreWeights, policy_cost,
                                 radar_area, radar_normalize, radar_report,
                                 select_policy)
+from repro.core.objective import (DEFAULT_OBJECTIVE, Constrained,
+                                  Constraint, Lexicographic, Objective,
+                                  PaperScore, Weighted, metrics_from_rows,
+                                  normalize_objective, parse_objective,
+                                  register_objective,
+                                  registered_objectives, report_costs,
+                                  resolve_goal, validate_objective)
 from repro.core.engine import (DEFAULT_ENGINE, PASS_BACKENDS, DrainEngine,
                                ReplayOutcome, register_backend)
 from repro.core.whatif import (Decision, decide, decide_ensemble,
@@ -42,6 +49,11 @@ __all__ = [
     "ReplayResult", "simulate_replay_batched", "state_metrics",
     "ScoreWeights", "PAPER_WEIGHTS", "policy_cost", "select_policy",
     "radar_area", "radar_normalize", "radar_report",
+    "Objective", "PaperScore", "Weighted", "Lexicographic",
+    "Constraint", "Constrained", "DEFAULT_OBJECTIVE",
+    "parse_objective", "validate_objective", "normalize_objective",
+    "resolve_goal", "register_objective", "registered_objectives",
+    "metrics_from_rows", "report_costs",
     "DrainEngine", "DEFAULT_ENGINE", "PASS_BACKENDS", "register_backend",
     "ReplayOutcome",
     "Decision", "decide", "decide_ensemble", "decide_legacy_vmap",

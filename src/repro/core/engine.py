@@ -59,6 +59,8 @@ from repro.core import scoring
 from repro.core.backfill import (priority_order,
                                  schedule_pass_with_order,
                                  static_priority_order)
+from repro.core.objective import (DEFAULT_OBJECTIVE, Objective,
+                                  ObjectiveLike, resolve_goal)
 from repro.core.des import (DrainMetrics, DrainResult, ReplayResult,
                             broadcast_state, drain_metrics,
                             simulate_replay_batched,
@@ -119,12 +121,18 @@ def as_pool(policy) -> EnginePool:
 
 
 class Decision(NamedTuple):
-    """One scheduling cycle's outcome (re-exported by ``whatif``)."""
+    """One scheduling cycle's outcome (re-exported by ``whatif``).
+
+    ``costs`` is the goal's compiled cost per fork (argmin = winner);
+    ``cost_terms`` the goal's per-term breakdown for ALL k forks
+    (``Objective.cost_terms`` — telemetry records every fork's
+    decomposition, not just the winning index)."""
     policy_index: jax.Array   # index into the pool (NOT the policy id)
-    costs: jax.Array          # (k,) per-policy cost
+    costs: jax.Array          # (k,) per-policy objective cost
     run_mask: jax.Array       # bool (max_jobs,) jobs to start now (qrun set)
     metrics: DrainMetrics     # (k,)-leading metrics for telemetry
     deadlocked: jax.Array     # (k,) bool
+    cost_terms: Optional[Dict[str, jax.Array]] = None  # term -> (k,)
 
 
 class ReplayOutcome(NamedTuple):
@@ -135,13 +143,20 @@ class ReplayOutcome(NamedTuple):
     ACTUAL times (completions retire at ground-truth ends); ``metrics``
     score true outcomes (runtime = ground truth) over each scenario's
     real slots, per-scenario ``total_nodes`` included.
+
+    ``costs``/``best`` are the per-objective selection (DESIGN.md §8):
+    the goal's compiled cost over the policy axis ((S, P) / (P,),
+    deadlocked forks at +inf) and its per-scenario argmin ((S,) /
+    scalar) — the policy the twin would pick for each replayed future.
     """
     start_t: jax.Array        # f32 (..., J)
     end_t: jax.Array          # f32 (..., J)
     metrics: DrainMetrics     # (...)-leading
     deadlocked: jax.Array     # bool (...)
-    events: jax.Array         # i32 (...) — events processed per fork
+    events: jax.Array        # i32 (...) — events processed per fork
     result: ReplayResult      # the raw flat (k = S·P) replay result
+    costs: Optional[jax.Array] = None   # objective costs (..., P)-shaped
+    best: Optional[jax.Array] = None    # per-scenario winning pool index
 
 
 # ----------------------------------------------------------------------
@@ -385,16 +400,22 @@ class DrainEngine:
 
     # -- decision cycles ----------------------------------------------
     def decide(self, state: SimState, pool: EnginePool,
-               weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS
-               ) -> Decision:
-        return _decide(self, state, pool, weights, self.plan(pool))
+               objective: ObjectiveLike = None, *,
+               weights: Optional[scoring.ScoreWeights] = None) -> Decision:
+        """One decision cycle under ``objective`` (an ``Objective``, a
+        grammar string, or None for the paper score).  ``weights=`` is
+        the deprecated legacy spelling (lifted, bit-identical)."""
+        goal = resolve_goal(objective, weights)
+        return _decide(self, state, pool, goal, self.plan(pool))
 
     def decide_ensemble(self, state: SimState, pool: EnginePool,
                         key: jax.Array, n_ens: int = 8, noise: float = 0.3,
-                        weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
+                        objective: ObjectiveLike = None, *,
+                        weights: Optional[scoring.ScoreWeights] = None,
                         ) -> Decision:
+        goal = resolve_goal(objective, weights)
         return _decide_ensemble(self, state, pool, key, n_ens, noise,
-                                weights, self.plan(pool))
+                                goal, self.plan(pool))
 
     # -- single pass (k=1) — the emulator's static baseline mode -------
     def schedule_pass_starts(self, state: SimState, policy) -> jax.Array:
@@ -403,29 +424,42 @@ class DrainEngine:
         return _single_pass(self, state, as_pool(policy))
 
     # -- trace replay (DESIGN.md §6) -----------------------------------
-    def replay(self, scenario, pool) -> ReplayOutcome:
+    def replay(self, scenario, pool, objective: ObjectiveLike = None, *,
+               weights: Optional[scoring.ScoreWeights] = None
+               ) -> ReplayOutcome:
         """Replay ONE scenario (an S=1 ``workload.ScenarioSet``) under
         every fork of ``pool`` — (P,)-leading outcome.  Bit-identical
-        to P host-emulator static-mode runs (tests/test_replay.py)."""
+        to P host-emulator static-mode runs (tests/test_replay.py).
+        ``objective`` drives the outcome's ``costs``/``best``
+        selection (the trace times themselves are goal-independent)."""
         S = int(scenario.total_nodes.shape[0])
         if S != 1:
             raise ValueError(
                 f"replay takes one scenario (got {S}); use replay_grid")
+        goal = resolve_goal(objective, weights)
         pool = as_pool(pool)
+        P = pool_size(pool)
         inputs = replay_inputs(scenario, pool)
-        res, metrics = _replay(self, *inputs, self.plan(pool))
-        return _shape_outcome(res, metrics, (pool_size(pool),))
+        res, metrics, costs, best = _replay(self, *inputs, self.plan(pool),
+                                            goal, P)
+        return _shape_outcome(res, metrics, (P,), costs, best)
 
-    def replay_grid(self, scenarios, pool) -> ReplayOutcome:
+    def replay_grid(self, scenarios, pool, objective: ObjectiveLike = None,
+                    *, weights: Optional[scoring.ScoreWeights] = None
+                    ) -> ReplayOutcome:
         """Evaluate the full (scenario × policy) grid — S·P forks, ONE
-        device computation.  Fork f = s·P + p; outcome axes (S, P)."""
+        device computation.  Fork f = s·P + p; outcome axes (S, P).
+        ``objective`` selects per scenario: ``best[s]`` is the pool
+        index the goal picks for scenario s (costs over the P axis)."""
+        goal = resolve_goal(objective, weights)
         pool = as_pool(pool)
         S = int(scenarios.total_nodes.shape[0])
+        P = pool_size(pool)
         inputs = replay_inputs(scenarios, pool)
         plan = self.plan(pool)                 # fork f = s·P + p
-        res, metrics = _replay(self, *inputs,
-                               plan * S if plan is not None else None)
-        return _shape_outcome(res, metrics, (S, pool_size(pool)))
+        res, metrics, costs, best = _replay(
+            self, *inputs, plan * S if plan is not None else None, goal, P)
+        return _shape_outcome(res, metrics, (S, P), costs, best)
 
 
 # ----------------------------------------------------------------------
@@ -452,13 +486,13 @@ def _drain(engine: DrainEngine, states: SimState,
 
 
 def _decide_impl(engine: DrainEngine, state: SimState, pool: EnginePool,
-                 weights: scoring.ScoreWeights,
+                 objective: Objective = DEFAULT_OBJECTIVE,
                  plan: HoistPlan = None) -> Decision:
     k = pool_size(pool)
     eval_mask = state.jobs.state == QUEUED
     res = _drain_impl(engine, broadcast_state(state, k), pool, plan)
     metrics = jax.vmap(drain_metrics, in_axes=(0, None))(res, eval_mask)
-    costs = scoring.policy_cost(metrics, weights)
+    costs = objective.costs(metrics)
     costs = jnp.where(res.deadlocked, jnp.inf, costs)
     best = scoring.select_policy(costs)
     return Decision(
@@ -467,22 +501,23 @@ def _decide_impl(engine: DrainEngine, state: SimState, pool: EnginePool,
         run_mask=res.first_started[best],
         metrics=metrics,
         deadlocked=res.deadlocked,
+        cost_terms=objective.cost_terms(metrics),
     )
 
 
-@functools.partial(jax.jit, static_argnames=("engine", "weights", "plan"))
+@functools.partial(jax.jit, static_argnames=("engine", "objective", "plan"))
 def _decide(engine: DrainEngine, state: SimState, pool: EnginePool,
-            weights: scoring.ScoreWeights,
+            objective: Objective = DEFAULT_OBJECTIVE,
             plan: HoistPlan = None) -> Decision:
-    return _decide_impl(engine, state, pool, weights, plan)
+    return _decide_impl(engine, state, pool, objective, plan)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("engine", "n_ens", "noise", "weights",
+                   static_argnames=("engine", "n_ens", "noise", "objective",
                                     "plan"))
 def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
                      key: jax.Array, n_ens: int, noise: float,
-                     weights: scoring.ScoreWeights,
+                     objective: Objective = DEFAULT_OBJECTIVE,
                      plan: HoistPlan = None) -> Decision:
     """k * n_ens forks ride ONE batch axis through ONE drain.
 
@@ -511,7 +546,7 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
     mean_metrics = jax.tree.map(
         lambda x: jnp.mean(x.reshape(n_ens, k), axis=0), metrics)
     dead = jnp.any(res.deadlocked.reshape(n_ens, k), axis=0)
-    costs = scoring.policy_cost(mean_metrics, weights)
+    costs = objective.costs(mean_metrics)
     costs = jnp.where(dead, jnp.inf, costs)
     best = scoring.select_policy(costs)
     return Decision(
@@ -520,6 +555,7 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
         run_mask=res.first_started.reshape(n_ens, k, cap)[0, best],
         metrics=mean_metrics,
         deadlocked=dead,
+        cost_terms=objective.cost_terms(mean_metrics),
     )
 
 
@@ -576,6 +612,19 @@ def replay_inputs(scenarios, pool: EnginePool):
         pool, P)
 
 
+def grid_select(objective: Objective, metrics: DrainMetrics,
+                deadlocked: jax.Array, P: int):
+    """Per-objective selection over a flat (k = S·P) replay batch:
+    reshape the metric fields to (S, P), compile the goal's costs over
+    the policy axis (deadlocked forks at +inf), argmin per scenario.
+    Pure device code — called inside the jitted replay, and eagerly by
+    the sharded wrapper (whatif.sharded_replay_grid)."""
+    grid = jax.tree.map(lambda x: x.reshape((-1, P) + x.shape[1:]), metrics)
+    costs = objective.costs(grid)                              # (S, P)
+    costs = jnp.where(deadlocked.reshape(-1, P), jnp.inf, costs)
+    return costs, jnp.argmin(costs, axis=-1)
+
+
 def _replay_impl(engine: DrainEngine, states: SimState,
                  arrival_t: jax.Array, true_rt: jax.Array,
                  pool: EnginePool, valid: jax.Array,
@@ -593,17 +642,22 @@ def _replay_impl(engine: DrainEngine, states: SimState,
 
 
 @_quiet_donation
-@functools.partial(jax.jit, static_argnames=("engine", "plan"),
+@functools.partial(jax.jit,
+                   static_argnames=("engine", "plan", "objective", "P"),
                    donate_argnames=("states",))
 def _replay(engine: DrainEngine, states: SimState, arrival_t: jax.Array,
             true_rt: jax.Array, pool: EnginePool, valid: jax.Array,
-            plan: HoistPlan = None):
-    return _replay_impl(engine, states, arrival_t, true_rt, pool, valid,
-                        plan)
+            plan: HoistPlan = None,
+            objective: Objective = DEFAULT_OBJECTIVE, P: int = 1):
+    res, metrics = _replay_impl(engine, states, arrival_t, true_rt, pool,
+                                valid, plan)
+    costs, best = grid_select(objective, metrics, res.deadlocked, P)
+    return res, metrics, costs, best
 
 
-def _shape_outcome(res: ReplayResult, metrics: DrainMetrics,
-                   shape) -> ReplayOutcome:
+def _shape_outcome(res: ReplayResult, metrics: DrainMetrics, shape,
+                   costs: Optional[jax.Array] = None,
+                   best: Optional[jax.Array] = None) -> ReplayOutcome:
     rs = lambda x: x.reshape(shape + x.shape[1:])
     return ReplayOutcome(
         start_t=rs(res.state.jobs.start_t),
@@ -612,6 +666,8 @@ def _shape_outcome(res: ReplayResult, metrics: DrainMetrics,
         deadlocked=rs(res.deadlocked),
         events=rs(res.events),
         result=res,
+        costs=costs.reshape(shape) if costs is not None else None,
+        best=best.reshape(shape[:-1]) if best is not None else None,
     )
 
 

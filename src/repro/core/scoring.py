@@ -15,6 +15,12 @@ is an argmin with first-occurrence wins).  With the parametric
 ``PolicySpec`` pools this stays the tie-break: the paper's WFP -> FCFS
 -> SJF priority is simply the order those fixed points occupy in the
 pool, and sweep grid points rank by their expansion order.
+
+This module defines the paper score's arithmetic; the *configurable*
+goal layer on top of it — single-metric, weighted, lexicographic and
+constrained objectives, plus the goal grammar — lives in
+``repro.core.objective`` (DESIGN.md §8).  ``objective="score"`` (the
+default everywhere) routes back through ``policy_cost`` bit-exactly.
 """
 from __future__ import annotations
 
@@ -62,21 +68,29 @@ RADAR_AXES = ("avg_wait", "max_wait", "avg_slowdown", "max_slowdown",
 _COST_AXES = ("avg_wait", "max_wait", "avg_slowdown", "max_slowdown")
 
 
-def radar_normalize(per_policy: Dict[str, Dict[str, float]]) -> Dict[str, Dict[str, float]]:
+def radar_normalize(per_policy: Dict[str, Dict[str, float]],
+                    axes: tuple = RADAR_AXES,
+                    cost_axes: tuple = _COST_AXES) -> Dict[str, Dict[str, float]]:
     """Min-max normalize each axis across policies so that the *best*
     policy gets radius 1 and the worst radius 0 (paper: larger area =
     better overall performance; FCFS measured area 0.00 => worst on all
-    axes maps to the origin)."""
+    axes maps to the origin).
+
+    ``axes``/``cost_axes`` default to the paper's five metrics; pass
+    the term names of an objective breakdown
+    (``Telemetry.objective_breakdown``) to chart the administrator's
+    goal instead — objective terms are ALL costs (rewards arrive
+    pre-negated), so ``cost_axes=axes`` there."""
     names = list(per_policy)
     out: Dict[str, Dict[str, float]] = {n: {} for n in names}
-    for axis in RADAR_AXES:
+    for axis in axes:
         vals = np.array([per_policy[n][axis] for n in names], dtype=np.float64)
         lo, hi = vals.min(), vals.max()
         span = hi - lo
         for n, v in zip(names, vals):
             if span <= 0:
                 r = 1.0
-            elif axis in _COST_AXES:
+            elif axis in cost_axes:
                 r = (hi - v) / span      # lower cost -> larger radius
             else:
                 r = (v - lo) / span      # higher utilization -> larger radius
@@ -84,17 +98,19 @@ def radar_normalize(per_policy: Dict[str, Dict[str, float]]) -> Dict[str, Dict[s
     return out
 
 
-def radar_area(radii: Dict[str, float]) -> float:
-    """Area of the radar polygon over RADAR_AXES (unit pentagon ~ 2.38)."""
-    r = np.array([radii[a] for a in RADAR_AXES], dtype=np.float64)
+def radar_area(radii: Dict[str, float], axes: tuple = RADAR_AXES) -> float:
+    """Area of the radar polygon over ``axes`` (unit pentagon ~ 2.38)."""
+    r = np.array([radii[a] for a in axes], dtype=np.float64)
     k = len(r)
     ang = 2.0 * np.pi / k
     return float(0.5 * np.sin(ang) * np.sum(r * np.roll(r, -1)))
 
 
-def radar_report(per_policy: Dict[str, Dict[str, float]]) -> Dict[str, float]:
-    normed = radar_normalize(per_policy)
-    return {n: radar_area(v) for n, v in normed.items()}
+def radar_report(per_policy: Dict[str, Dict[str, float]],
+                 axes: tuple = RADAR_AXES,
+                 cost_axes: tuple = _COST_AXES) -> Dict[str, float]:
+    normed = radar_normalize(per_policy, axes, cost_axes)
+    return {n: radar_area(v, axes) for n, v in normed.items()}
 
 
 def summarize_pool(names, metrics: DrainMetrics) -> Dict[str, Dict[str, float]]:

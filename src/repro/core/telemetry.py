@@ -11,9 +11,16 @@ class CycleRecord:
     time: float                # virtual (cluster) time of the cycle
     wall_seconds: float        # host wall time of the decision
     policy: str                # winning policy name
-    costs: Dict[str, float]    # per-policy cost
+    costs: Dict[str, float]    # per-policy objective cost
     n_started: int             # jobs qrun this cycle
     started_jobs: List[int]
+    # the goal this cycle minimized (objective grammar spec) and its
+    # per-term cost breakdown for ALL k forks (policy -> term -> cost),
+    # as computed on device by Objective.cost_terms — reports consume
+    # these instead of recomputing costs from raw metrics on the host.
+    objective: str = "score"
+    term_costs: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -36,6 +43,24 @@ class Telemetry:
         for p in self.job_start_policy.values():
             counts[p] = counts.get(p, 0) + 1
         return {p: 100.0 * c / total for p, c in sorted(counts.items())}
+
+    # ---- objective breakdown (DESIGN.md §8) ---------------------------
+    def objective_breakdown(self) -> Dict[str, Dict[str, float]]:
+        """Mean per-term objective cost per policy across all recorded
+        cycles (policy -> term -> mean cost) — the device-computed
+        decomposition of what each candidate would have cost under the
+        administrator's goal, ready for radar/summary reports with no
+        host-side recomputation."""
+        sums: Dict[str, Dict[str, float]] = {}
+        counts: Dict[str, int] = {}
+        for c in self.cycles:
+            for pol, terms in c.term_costs.items():
+                acc = sums.setdefault(pol, {})
+                counts[pol] = counts.get(pol, 0) + 1
+                for term, v in terms.items():
+                    acc[term] = acc.get(term, 0.0) + v
+        return {pol: {term: s / counts[pol] for term, s in acc.items()}
+                for pol, acc in sums.items()}
 
     # ---- overhead (paper: "a few seconds per scheduling cycle") -------
     def cycle_latency_stats(self) -> Dict[str, float]:

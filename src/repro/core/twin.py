@@ -22,8 +22,9 @@ import numpy as np
 from repro.core import sync, telemetry
 from repro.core.engine import DrainEngine
 from repro.core.events import Event, EventBus, EventKind
+from repro.core.objective import ObjectiveLike, resolve_goal
 from repro.core.policies import PAPER_POOL, PoolLike, normalize_pool
-from repro.core.scoring import PAPER_WEIGHTS, ScoreWeights
+from repro.core.scoring import ScoreWeights
 from repro.core.state import SimState, empty_state
 
 
@@ -48,6 +49,14 @@ class SchedTwin:
         string (``"paper,wfp:a=1..5x5"``), or a sequence of legacy
         policy ids — ids are lifted to their parametric fixed points,
         which produce bit-identical decisions (tests/test_policyspec).
+    objective : the administrator-configured optimization goal (§3.4;
+        DESIGN.md §8) policy selection minimizes — an
+        ``objective.Objective``, a grammar string (``"score"``,
+        ``"avg_wait"``, ``"min:avg_wait@util>=0.85"``), or None for
+        the paper's 4-term score.
+    weights : DEPRECATED legacy goal spelling; a ``ScoreWeights`` here
+        lifts to the bit-identical paper-score objective (with a
+        ``DeprecationWarning``).
     ensemble : if > 1, use uncertainty-ensemble decisions (beyond paper).
     engine : the policy-batched what-if engine (``core.engine``); pick
         the scheduling-pass backend here (``DrainEngine("pallas")`` for
@@ -63,7 +72,8 @@ class SchedTwin:
                  total_nodes: int,
                  max_jobs: int = 256,
                  pool: PoolLike = PAPER_POOL,
-                 weights: ScoreWeights = PAPER_WEIGHTS,
+                 objective: ObjectiveLike = None,
+                 weights: Optional[ScoreWeights] = None,
                  free_nodes_probe: Optional[Callable[[], int]] = None,
                  ensemble: int = 1,
                  ensemble_noise: float = 0.3,
@@ -72,7 +82,7 @@ class SchedTwin:
         self.bus = bus
         self.qrun = qrun
         self.pool = normalize_pool(pool)
-        self.weights = weights
+        self.objective = resolve_goal(objective, weights)
         self.state: SimState = empty_state(max_jobs, total_nodes)
         self.telemetry = telemetry.Telemetry()
         self.free_nodes_probe = free_nodes_probe
@@ -116,10 +126,10 @@ class SchedTwin:
                 decision = self.engine.decide_ensemble(
                     self.state, self.pool.spec, sub,
                     n_ens=self.ensemble, noise=self.ensemble_noise,
-                    weights=self.weights)
+                    objective=self.objective)
             else:
                 decision = self.engine.decide(self.state, self.pool.spec,
-                                              weights=self.weights)
+                                              self.objective)
             run_mask = np.asarray(decision.run_mask)  # blocks for timing
 
         job_ids = [int(j) for j in np.nonzero(run_mask)[0]]
@@ -129,9 +139,19 @@ class SchedTwin:
         costs = {name: float(c)
                  for name, c in zip(self.pool.names,
                                     np.asarray(decision.costs))}
+        # the goal's per-term device-computed breakdown for ALL k forks
+        # (policy -> term -> cost): downstream reports (radar areas,
+        # summarize-style tables) consume this instead of recomputing
+        # costs on the host from raw metrics.
+        term_arrays = {term: np.asarray(v)
+                       for term, v in (decision.cost_terms or {}).items()}
+        term_costs = {name: {term: float(v[i])
+                             for term, v in term_arrays.items()}
+                      for i, name in enumerate(self.pool.names)}
         self.telemetry.record(telemetry.CycleRecord(
             time=t, wall_seconds=sw.seconds, policy=winner,
-            costs=costs, n_started=len(job_ids), started_jobs=job_ids))
+            costs=costs, n_started=len(job_ids), started_jobs=job_ids,
+            objective=str(self.objective), term_costs=term_costs))
 
         if job_ids:
             # ⑦ qrun — the physical system will emit RUNJOB events that

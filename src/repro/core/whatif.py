@@ -14,6 +14,11 @@ Every entry point also accepts a sweep-grammar string (``"paper"``,
 vector (``pool_array`` is the thin adapter that builds one); ids flow
 through the engine's bit-exact pre-parametric oracle path.
 
+Every entry point takes ``objective=`` — the administrator-configured
+optimization goal (``core.objective``, DESIGN.md §8) as an
+``Objective`` or grammar string; the deprecated ``weights=`` kwarg
+lifts to the bit-identical paper-score objective.
+
 This module is the thin public API over the engine:
 
   * ``decide`` / ``decide_ensemble`` — one scheduling cycle on the
@@ -39,6 +44,7 @@ from repro.core import scoring
 from repro.core.des import drain_metrics, simulate_to_drain
 from repro.core.engine import (DEFAULT_ENGINE, Decision, DrainEngine,
                                EnginePool)
+from repro.core.objective import ObjectiveLike, resolve_goal
 from repro.core.policies import (PolicyPool, PolicySpec, normalize_pool,
                                  parse_pool)
 from repro.core.state import QUEUED, SimState
@@ -64,35 +70,43 @@ def _engine_pool(pool: PoolArg) -> EnginePool:
 
 
 def decide(state: SimState, pool: PoolArg,
-           weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
+           objective: ObjectiveLike = None, *,
+           weights: Optional[scoring.ScoreWeights] = None,
            engine: Optional[DrainEngine] = None) -> Decision:
     """One scheduling cycle: fork k sims, score, select, extract qrun set.
 
     ``pool`` is a ``PolicyPool`` / ``PolicySpec`` stack / grammar
     string / legacy i32 id vector, ordered by tie-break priority.
-    Everything (all k drain simulations included) is a single XLA
-    computation — the per-cycle overhead the paper reports as "a few
-    seconds" is microseconds here (see benchmarks/overhead.py).
+    ``objective`` is the administrator's goal (DESIGN.md §8): an
+    ``Objective``, a grammar string (``"score"``, ``"avg_wait"``,
+    ``"min:avg_wait@util>=0.85"``), or None for the paper score;
+    ``weights=`` is the deprecated legacy spelling (lifted
+    bit-identically with a DeprecationWarning).  Everything (all k
+    drain simulations included) is a single XLA computation — the
+    per-cycle overhead the paper reports as "a few seconds" is
+    microseconds here (see benchmarks/overhead.py).
     """
     return (engine or DEFAULT_ENGINE).decide(
-        state, _engine_pool(pool), weights=weights)
+        state, _engine_pool(pool), objective, weights=weights)
 
 
 def decide_ensemble(state: SimState, pool: PoolArg, key: jax.Array,
                     n_ens: int = 8, noise: float = 0.3,
-                    weights: scoring.ScoreWeights = scoring.PAPER_WEIGHTS,
+                    objective: ObjectiveLike = None, *,
+                    weights: Optional[scoring.ScoreWeights] = None,
                     engine: Optional[DrainEngine] = None) -> Decision:
     """Uncertainty-aware cycle (beyond paper).
 
     Each ensemble member rescales every job's estimate by a lognormal
     factor (sigma=``noise``) before simulating; the policy cost is the
-    ensemble mean.  The qrun set is taken from the unperturbed member
-    so actions stay consistent with the mirror.  All k * n_ens forks
-    ride one batch axis through one drain.
+    ensemble mean (under ``objective``, as in ``decide``).  The qrun
+    set is taken from the unperturbed member so actions stay consistent
+    with the mirror.  All k * n_ens forks ride one batch axis through
+    one drain.
     """
     return (engine or DEFAULT_ENGINE).decide_ensemble(
         state, _engine_pool(pool), key, n_ens=n_ens, noise=noise,
-        weights=weights)
+        objective=objective, weights=weights)
 
 
 # ----------------------------------------------------------------------
@@ -130,7 +144,9 @@ def decide_legacy_vmap(state: SimState, pool: jax.Array,
 # ----------------------------------------------------------------------
 
 def sharded_whatif(mesh: Mesh, axis: str = "data",
-                   engine: Optional[DrainEngine] = None):
+                   engine: Optional[DrainEngine] = None,
+                   objective: ObjectiveLike = None, *,
+                   weights: Optional[scoring.ScoreWeights] = None):
     """Fleet-scale what-if: the fork (policy/ensemble) axis of the
     batched engine sharded over ``axis`` of ``mesh``.  Returns a jitted
     function with the same signature as ``decide`` whose pool size must
@@ -154,6 +170,7 @@ def sharded_whatif(mesh: Mesh, axis: str = "data",
     from repro.core.engine import _decide_impl  # the unjitted body
 
     eng = engine or DEFAULT_ENGINE
+    goal = resolve_goal(objective, weights)
     pool_sharding = NamedSharding(mesh, P(axis))
     replicated = NamedSharding(mesh, P())
 
@@ -161,7 +178,7 @@ def sharded_whatif(mesh: Mesh, axis: str = "data",
                        in_shardings=(replicated, pool_sharding),
                        out_shardings=replicated)
     def decide_sharded(state: SimState, pool: EnginePool) -> Decision:
-        return _decide_impl(eng, state, pool, scoring.PAPER_WEIGHTS)
+        return _decide_impl(eng, state, pool, goal)
 
     def wrapper(state: SimState, pool: PoolArg) -> Decision:
         return decide_sharded(state, _engine_pool(pool))
@@ -170,7 +187,9 @@ def sharded_whatif(mesh: Mesh, axis: str = "data",
 
 
 def sharded_replay_grid(mesh: Mesh, axis: str = "data",
-                        engine: Optional[DrainEngine] = None):
+                        engine: Optional[DrainEngine] = None,
+                        objective: ObjectiveLike = None, *,
+                        weights: Optional[scoring.ScoreWeights] = None):
     """Fleet-scale replay: the SCENARIO axis of ``engine.replay_grid``
     sharded over ``axis`` of ``mesh`` (DESIGN.md §6).
 
@@ -184,12 +203,16 @@ def sharded_replay_grid(mesh: Mesh, axis: str = "data",
     pass elision stay on and results remain bit-identical.
 
     Returns a function ``(scenarios: workload.ScenarioSet, pool) ->
-    ReplayOutcome`` with the same semantics as ``replay_grid``.
+    ReplayOutcome`` with the same semantics as ``replay_grid``,
+    including the per-objective ``costs``/``best`` selection (computed
+    on the replicated metrics after the sharded replay — a handful of
+    (S, P)-sized device ops).
     """
     from repro.core.engine import (_replay_impl, _shape_outcome, as_pool,
-                                   pool_size, replay_inputs)
+                                   grid_select, pool_size, replay_inputs)
 
     eng = engine or DEFAULT_ENGINE
+    goal = resolve_goal(objective, weights)
     sharded = NamedSharding(mesh, P(axis))
     replicated = NamedSharding(mesh, P())
     n_shards = mesh.shape[axis]
@@ -208,7 +231,10 @@ def sharded_replay_grid(mesh: Mesh, axis: str = "data",
                 f"S={S} scenarios not divisible by {n_shards}-way "
                 f"'{axis}' axis")
         res, metrics = run(*replay_inputs(scenarios, pool))
-        return _shape_outcome(res, metrics, (S, pool_size(pool)))
+        costs, best = grid_select(goal, metrics, res.deadlocked,
+                                  pool_size(pool))
+        return _shape_outcome(res, metrics, (S, pool_size(pool)),
+                              costs, best)
 
     return wrapper
 

@@ -6,6 +6,15 @@
     python -m repro.launch.twin_loop --backend pallas # kernel what-ifs
     python -m repro.launch.twin_loop --trace bursty   # diurnal arrivals
     python -m repro.launch.twin_loop --replay-grid 8  # S x P baseline grid
+    python -m repro.launch.twin_loop --objective avg_wait
+    python -m repro.launch.twin_loop \\
+        --objective "min:avg_wait@util>=0.85"         # constrained goal
+
+``--objective`` is the administrator-configured optimization goal
+(§3.4; ``repro.core.objective``, DESIGN.md §8): the goal grammar is
+validated (parse -> spec -> parse round-trip) and the resolved goal is
+logged at startup.  In twin mode it drives every decision cycle; in
+``--replay-grid`` mode it drives the per-scenario policy selection.
 
 ``--replay-grid S`` skips the co-simulation and instead evaluates the
 full (S scenarios × pool) baseline grid in ONE batched device replay
@@ -30,39 +39,54 @@ from repro.cluster.workload import (bursty_trace, paper_synthetic_trace,
                                     poisson_trace)
 from repro.core.engine import PASS_BACKENDS, DrainEngine
 from repro.core.events import EventBus
+from repro.core.objective import Objective, validate_objective
 from repro.core.policies import parse_pool
 from repro.core.twin import SchedTwin
 
 
-def replay_grid(args, engine: DrainEngine) -> None:
-    """--replay-grid: the S × P baseline grid as ONE device replay."""
+def resolve_objective(grammar: str) -> Objective:
+    """Parse ``--objective`` with round-trip validation
+    (``objective.validate_objective``), CLI-fatal on failure."""
+    try:
+        return validate_objective(grammar)
+    except ValueError as e:
+        raise SystemExit(str(e))
+
+
+def replay_grid(args, engine: DrainEngine, goal: Objective) -> None:
+    """--replay-grid: the S × P baseline grid as ONE device replay,
+    with the per-scenario policy selection under ``goal``."""
     import time
 
     from repro.configs.schedtwin import ReplayGridConfig
 
     cfg = ReplayGridConfig(scenarios=args.replay_grid, trace=args.trace,
                            n_jobs=args.jobs, total_nodes=args.nodes,
-                           pool=args.pool, seed=args.seed,
+                           pool=args.pool, objective=goal, seed=args.seed,
                            backend=engine.backend)
     pool = cfg.make_pool()
     scen = cfg.make_scenarios()
     t0 = time.perf_counter()
-    out = engine.replay_grid(scen, pool.spec)
+    out = engine.replay_grid(scen, pool.spec, cfg.make_objective())
     np.asarray(out.end_t)  # block
     wall = time.perf_counter() - t0
     S, P = out.deadlocked.shape
     print(f"replay grid: S={S} scenarios x P={P} policies "
           f"({S * P} forks, one device computation) in {wall:.2f}s")
     print(f"{'policy':>16s} {'avg_wait':>9s} {'max_wait':>9s} "
-          f"{'avg_sd':>7s} {'util':>6s} {'dead':>5s}")
+          f"{'avg_sd':>7s} {'util':>6s} {'dead':>5s} {'picked':>7s}")
     m = out.metrics
+    best = np.asarray(out.best)                 # per-scenario selection
     for p, name in enumerate(pool.names):
         print(f"{name:>16s} "
               f"{float(np.mean(np.asarray(m.avg_wait)[:, p])):9.1f} "
               f"{float(np.mean(np.asarray(m.max_wait)[:, p])):9.1f} "
               f"{float(np.mean(np.asarray(m.avg_slowdown)[:, p])):7.2f} "
               f"{float(np.mean(np.asarray(m.utilization)[:, p])):6.3f} "
-              f"{int(np.asarray(out.deadlocked)[:, p].sum()):5d}")
+              f"{int(np.asarray(out.deadlocked)[:, p].sum()):5d} "
+              f"{int((best == p).sum()):4d}/{S}")
+    print(f"objective {goal}: per-scenario winners "
+          f"{[pool.names[int(b)] for b in best]}")
 
 
 def main() -> None:
@@ -81,6 +105,12 @@ def main() -> None:
                          "optionally swept, e.g. 'paper', 'extended', "
                          "'wfp,fcfs,sjf,wfp:a=1..5x5' (see "
                          "policies.parse_pool)")
+    ap.add_argument("--objective", default="score",
+                    help="optimization goal grammar (core.objective."
+                         "parse_objective): 'score' (paper default), "
+                         "'avg_wait', '0.5*avg_wait+0.5*max_slowdown', "
+                         "'lex:avg_wait,makespan', "
+                         "'min:avg_wait@util>=0.85'")
     ap.add_argument("--ensemble", type=int, default=1)
     ap.add_argument("--failures", type=int, default=0)
     ap.add_argument("--backend",
@@ -102,12 +132,14 @@ def main() -> None:
     enable_persistent_cache(enabled=not args.no_compile_cache)
     engine = DrainEngine(backend=args.backend)
     pool = parse_pool(args.pool)
+    goal = resolve_objective(args.objective)
     print(f"pool: k={len(pool)} forks "
           f"[{', '.join(pool.names[:8])}{', ...' if len(pool) > 8 else ''}] "
           f"backend={engine.backend}")
+    print(f"objective: {goal} ({type(goal).__name__})")
 
     if args.replay_grid:
-        return replay_grid(args, engine)
+        return replay_grid(args, engine, goal)
 
     if args.trace == "paper":
         trace = paper_synthetic_trace(seed=args.seed)
@@ -130,15 +162,27 @@ def main() -> None:
                          check_invariants=True, engine=engine)
     twin = SchedTwin(
         bus=bus, qrun=em.qrun, total_nodes=args.nodes,
-        max_jobs=em.max_jobs, pool=pool,
+        max_jobs=em.max_jobs, pool=pool, objective=goal,
         free_nodes_probe=lambda: em.free_nodes,
         ensemble=args.ensemble, engine=engine)
-    report = em.run(on_event=twin.pump)
+    report = em.run(on_event=twin.pump, objective=goal)
 
     print(f"jobs={report.n_jobs} events={report.n_events} "
           f"restarts={report.n_restarts}")
     for k, v in report.metric_dict().items():
         print(f"  {k:14s} {v:10.2f}")
+    if report.objective_cost is not None:
+        print(f"objective cost ({report.objective}): "
+              f"{report.objective_cost:.3f}")
+    else:
+        # rank-based goal: a lone run has no scalar cost — show terms
+        terms = " ".join(f"{t}={v:.2f}"
+                         for t, v in (report.objective_terms or {}).items())
+        print(f"objective terms ({report.objective}): {terms}")
+    breakdown = twin.telemetry.objective_breakdown()
+    for name, terms in breakdown.items():
+        parts = " ".join(f"{t}={v:.2f}" for t, v in terms.items())
+        print(f"  whatif breakdown {name:>10s}: {parts}")
     print("policy mix:", {k: f"{v:.1f}%" for k, v in
                           twin.telemetry.policy_start_distribution().items()})
     lat = twin.telemetry.cycle_latency_stats()
