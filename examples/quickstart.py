@@ -14,6 +14,8 @@ from repro.core import EventBus, SchedTwin
 from repro.core.engine import DrainEngine
 from repro.core.policies import FCFS, SJF, WFP, parse_pool, policy_name
 from repro.core.scoring import radar_report
+from repro.core.whatif import sharded_replay_grid
+from repro.launch.mesh import make_fleet_mesh
 
 trace = paper_synthetic_trace(seed=0)          # 150 jobs, 4 phases
 
@@ -38,6 +40,24 @@ grid = DrainEngine().replay_grid(scenarios, pool7.spec,
                                  "min:avg_wait@util>=0.7")
 print("grid avg_wait (S=4 x P=7):\n", np.asarray(grid.metrics.avg_wait))
 print("per-scenario picks:", [pool7.names[int(b)] for b in grid.best])
+
+# --- fleet scale: the same grid, sharded + streamed ------------------
+# The fleet engine (DESIGN.md §9) shards the SCENARIO axis over the
+# local device mesh and streams it in fixed-size blocks — one compiled
+# shape regardless of S, host-side ingestion of block i+1 overlapping
+# the device drain of block i (prefetch_depth), and the §7 static-key
+# hoisting applied shard-locally.  Bit-identical to replay_grid above;
+# S is unconstrained (inert padding fills the last block).  CLI:
+#     python -m repro.launch.twin_loop --replay-grid 1024 \
+#         --shard 0 --block-size 128 --prefetch 2
+fleet = sharded_replay_grid(make_fleet_mesh(), engine=DrainEngine(),
+                            objective="min:avg_wait@util>=0.7",
+                            block_size=2, prefetch_depth=2)
+big = stack_scenarios([paper_synthetic_trace(seed=s)
+                       for s in range(6)], total_nodes=32)
+out = fleet(big, pool7.spec)
+print("fleet picks (S=6, blocks of 2):",
+      [pool7.names[int(b)] for b in out.best])
 
 # --- the twin: simulation-in-the-loop adaptive scheduling ------------
 # ``pool`` takes the sweep grammar (DESIGN.md §5): one what-if fork per

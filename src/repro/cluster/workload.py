@@ -299,6 +299,55 @@ def make_scenario(trace: Sequence[JobSpec], total_nodes: int,
     return stack_scenarios([trace], total_nodes, max_jobs=max_jobs)
 
 
+def slice_scenarios(scenarios: ScenarioSet, start: int,
+                    stop: int) -> ScenarioSet:
+    """Rows ``[start, stop)`` as a ``ScenarioSet`` of numpy VIEWS — no
+    copies; the fleet streamer (``whatif.sharded_replay_grid``) cuts
+    its fixed-size blocks with this, so slicing a 10k-scenario set into
+    blocks costs nothing on the host."""
+    cut = lambda x: x[start:stop]
+    return ScenarioSet(
+        submit_t=cut(scenarios.submit_t),
+        nodes=cut(scenarios.nodes),
+        est_runtime=cut(scenarios.est_runtime),
+        true_runtime=cut(scenarios.true_runtime),
+        valid=cut(scenarios.valid),
+        n_jobs=cut(scenarios.n_jobs),
+        total_nodes=cut(scenarios.total_nodes),
+    )
+
+
+def pad_scenarios(scenarios: ScenarioSet, multiple: int) -> ScenarioSet:
+    """Pad the scenario axis up to the next multiple of ``multiple``
+    with INERT rows: ``valid`` all-False (so every arrival is ``inf``
+    and the fork is born drained — it never becomes live, never queues
+    a job, and therefore never influences the lock-step dynamic pass
+    bound of real forks), zero jobs, ``total_nodes=1`` (keeps the
+    per-scenario metric denominators finite; padded-row metrics are
+    dropped before selection anyway).  Identity when S already divides.
+    """
+    S = scenarios.n_scenarios
+    if multiple <= 0:
+        raise ValueError(f"multiple must be positive, got {multiple}")
+    pad = (-S) % multiple
+    if pad == 0:
+        return scenarios
+    J = scenarios.capacity
+    z = lambda dt: np.zeros((pad, J), dtype=dt)
+    cat = np.concatenate
+    return ScenarioSet(
+        submit_t=cat([scenarios.submit_t, z(np.float32)]),
+        nodes=cat([scenarios.nodes, z(np.int32)]),
+        est_runtime=cat([scenarios.est_runtime, z(np.float32)]),
+        true_runtime=cat([scenarios.true_runtime, z(np.float32)]),
+        valid=cat([scenarios.valid, z(bool)]),
+        n_jobs=cat([scenarios.n_jobs,
+                    np.zeros((pad,), dtype=np.int32)]),
+        total_nodes=cat([scenarios.total_nodes,
+                         np.ones((pad,), dtype=np.int32)]),
+    )
+
+
 # ----------------------------------------------------------------------
 # Conversions & SWF I/O
 # ----------------------------------------------------------------------

@@ -133,7 +133,14 @@ def pass_rank_limit(states: SimState, fork_mask: jax.Array) -> jax.Array:
     Truncating the sequential rank loops there is therefore bit-exact.
     ``fork_mask`` excludes forks whose pass output is masked away
     anyway (done/dead/not-live), so a deadlocked fork's eternally-queued
-    job cannot pin the bound at J."""
+    job cannot pin the bound at J.
+
+    Under the fleet engine (DESIGN.md §9) the bound is SHARD-LOCAL:
+    ``shard_map`` runs this over each device's chunk of the fork axis,
+    so one shard's deep queue never widens another shard's pass.  The
+    bound only changes how much work a pass performs, never what it
+    computes, so results stay bit-identical to the unsharded batch —
+    only ``pass_invocations``-style telemetry differs."""
     n_queued = jnp.sum(states.jobs.state == QUEUED, axis=1)      # (k,)
     return jnp.max(jnp.where(fork_mask, n_queued, 0)).astype(jnp.int32)
 

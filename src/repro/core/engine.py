@@ -253,6 +253,32 @@ def hoist_plan(pool: EnginePool, enabled: bool = True) -> HoistPlan:
     return tuple(bool(b) for b in mask)
 
 
+def shard_local_plan(plan: HoistPlan, n_shards: int) -> HoistPlan:
+    """Repartition a full-pool hoist plan for a ``shard_map`` body that
+    sees only its shard's block of the fork axis (DESIGN.md §9).
+
+    ``shard_map`` traces ONE program executed by every device, so a
+    static per-shard plan is only expressible when every shard's chunk
+    of the full plan is IDENTICAL — then the common chunk simply *is*
+    the local plan, and each device hoists its own forks' argsorts with
+    zero cross-shard traffic (this is what re-enables the PR-4
+    compaction win under sharding; the replay grid's plan is periodic
+    in P, so its chunks always agree).  Heterogeneous chunks (or a fork
+    count that doesn't block-split) fall back to ``None`` — per-event
+    sorting for all forks, bit-identical either way."""
+    if plan is None or n_shards <= 1:
+        return plan
+    k = len(plan)
+    if k % n_shards:
+        return None
+    chunk = k // n_shards
+    first = plan[:chunk]
+    for i in range(1, n_shards):
+        if plan[i * chunk:(i + 1) * chunk] != first:
+            return None
+    return first if any(first) else None
+
+
 def _index_pool(pool: EnginePool, idx: jax.Array) -> EnginePool:
     if isinstance(pool, PolicySpec):
         return PolicySpec(pool.family[idx], pool.theta[idx])
@@ -276,8 +302,29 @@ def _compact_queued_first(order: jax.Array, queued: jax.Array) -> jax.Array:
     return jnp.zeros_like(order).at[jnp.arange(k)[:, None], pos].set(order)
 
 
+def hoisted_orders(states0: SimState, pool: EnginePool, plan: HoistPlan,
+                   ever_queued: jax.Array) -> jax.Array:
+    """The (n_ti, J) static priority orders of ``plan``'s
+    time-invariant forks — the argsorts ``make_order_fn`` hoists out of
+    the event loop.  Split out so fleet callers can compute it OUTSIDE
+    a ``shard_map`` body and feed it back in as a sharded argument:
+    jax 0.4 miscompiles an argsort that is loop-invariant to a
+    ``while_loop`` consuming it via gathers inside ``shard_map``
+    (non-leading shards read corrupted orders); a sort performed in the
+    surrounding GSPMD region and passed through the shard boundary as
+    an input is partitioned correctly (tests/test_fleet.py pins the
+    parity)."""
+    plan_arr = np.asarray(plan, dtype=bool)
+    ti_idx = jnp.asarray(np.nonzero(plan_arr)[0], dtype=jnp.int32)
+    states_ti = jax.tree.map(lambda x: x[ti_idx], states0)
+    return jax.vmap(static_priority_order)(
+        states_ti, _index_pool(pool, ti_idx), ever_queued[ti_idx])
+
+
 def make_order_fn(states0: SimState, pool: EnginePool, plan: HoistPlan,
-                  ever_queued: jax.Array) -> Callable[[SimState], jax.Array]:
+                  ever_queued: jax.Array,
+                  hoisted: Optional[jax.Array] = None,
+                  ) -> Callable[[SimState], jax.Array]:
     """The per-event order stage, with static-key forks hoisted.
 
     ``ever_queued`` (k, J) marks every slot that can EVER be queued
@@ -289,14 +336,18 @@ def make_order_fn(states0: SimState, pool: EnginePool, plan: HoistPlan,
     rows only (or disappears entirely for an all-static pool).  The
     hoisted rows are re-compacted queued-first per event (a cumsum, not
     a sort) to keep the dynamic pass bound tight.
+
+    ``hoisted`` optionally supplies the precomputed static orders
+    (``hoisted_orders``) — the shard-local fleet paths pass their
+    shard's rows in to keep the argsort outside the ``shard_map`` body
+    (see ``hoisted_orders`` for why).
     """
     if plan is None:
         return lambda st: batched_priority_order(st, pool)
     plan_arr = np.asarray(plan, dtype=bool)
     ti_idx = jnp.asarray(np.nonzero(plan_arr)[0], dtype=jnp.int32)
-    states_ti = jax.tree.map(lambda x: x[ti_idx], states0)
-    hoisted = jax.vmap(static_priority_order)(
-        states_ti, _index_pool(pool, ti_idx), ever_queued[ti_idx])
+    if hoisted is None:
+        hoisted = hoisted_orders(states0, pool, plan, ever_queued)
 
     if plan_arr.all():
         # zero per-event sorting: just repartition the fixed ranking
@@ -467,11 +518,13 @@ class DrainEngine:
 # ----------------------------------------------------------------------
 
 def _drain_impl(engine: DrainEngine, states: SimState, pool: EnginePool,
-                plan: HoistPlan = None) -> DrainResult:
+                plan: HoistPlan = None,
+                hoisted: Optional[jax.Array] = None) -> DrainResult:
     # Mid-drain, no new jobs appear: only slots queued at entry can
     # ever be queued — the tightest hoist domain.
     order_fn = make_order_fn(states, pool, plan,
-                             ever_queued=states.jobs.state == QUEUED)
+                             ever_queued=states.jobs.state == QUEUED,
+                             hoisted=hoisted)
     return simulate_to_drain_batched(
         states, order_fn, engine.pass_fn(),
         dynamic_bounds=engine.dynamic_bounds)
@@ -593,23 +646,50 @@ def _tiled_replay_inputs(submit, nodes, est, true_rt, valid, totals,
     return states, arrival_t, rep(true_rt), tile_pool(pool, S), valid
 
 
+#: Per-``ScenarioSet`` memo of the UNTILED device conversions (the six
+#: ``jnp.asarray`` host->device transfers).  Keyed on object identity,
+#: evicted by ``weakref.finalize`` when the set dies — never on raw id
+#: reuse.  Only the untiled buffers are safe to reuse: the tiled
+#: ``states`` is DONATED to the jitted replay, so ``replay_inputs``
+#: reruns the (jitted, ~free) tiling per call to mint fresh donatable
+#: buffers.  Callers must not mutate a ``ScenarioSet``'s arrays after
+#: its first replay (``stack_scenarios`` fills them before returning).
+_SCENARIO_ARRAY_CACHE: Dict[int, Tuple] = {}
+
+
+def _scenario_arrays(scenarios) -> Tuple:
+    import weakref
+    key = id(scenarios)
+    hit = _SCENARIO_ARRAY_CACHE.get(key)
+    if hit is not None:
+        return hit
+    cvt = lambda x, dt: jnp.asarray(x, dtype=dt)
+    arrs = (cvt(scenarios.submit_t, jnp.float32),
+            cvt(scenarios.nodes, jnp.int32),
+            cvt(scenarios.est_runtime, jnp.float32),
+            cvt(scenarios.true_runtime, jnp.float32),
+            cvt(scenarios.valid, bool),
+            cvt(scenarios.total_nodes, jnp.int32))
+    try:
+        weakref.finalize(scenarios, _SCENARIO_ARRAY_CACHE.pop, key, None)
+    except TypeError:
+        return arrs          # un-weakref-able stand-in: serve uncached
+    _SCENARIO_ARRAY_CACHE[key] = arrs
+    return arrs
+
+
 def replay_inputs(scenarios, pool: EnginePool):
     """Device inputs for the flat (k = S·P) replay batch from a
     ``workload.ScenarioSet``-shaped object: scenario rows repeat P times
     (fork f = s·P + p), the pool tiles once per scenario, and the job
     table is preloaded but fully INVALID — arrivals inject slots as the
     replay reaches them.  Shared by ``DrainEngine.replay_grid`` and
-    ``whatif.sharded_replay_grid`` (which shards the leading axis)."""
+    ``whatif.sharded_replay_grid`` (which shards the leading axis).
+    The host->device conversion of the scenario arrays is memoized per
+    ``ScenarioSet`` identity (``_scenario_arrays``); the tiling reruns
+    per call because its output is donated."""
     P = pool_size(pool)
-    cvt = lambda x, dt: jnp.asarray(x, dtype=dt)
-    return _tiled_replay_inputs(
-        cvt(scenarios.submit_t, jnp.float32),
-        cvt(scenarios.nodes, jnp.int32),
-        cvt(scenarios.est_runtime, jnp.float32),
-        cvt(scenarios.true_runtime, jnp.float32),
-        cvt(scenarios.valid, bool),
-        cvt(scenarios.total_nodes, jnp.int32),
-        pool, P)
+    return _tiled_replay_inputs(*_scenario_arrays(scenarios), pool, P)
 
 
 def grid_select(objective: Objective, metrics: DrainMetrics,
@@ -617,22 +697,32 @@ def grid_select(objective: Objective, metrics: DrainMetrics,
     """Per-objective selection over a flat (k = S·P) replay batch:
     reshape the metric fields to (S, P), compile the goal's costs over
     the policy axis (deadlocked forks at +inf), argmin per scenario.
-    Pure device code — called inside the jitted replay, and eagerly by
-    the sharded wrapper (whatif.sharded_replay_grid)."""
+    Pure device code — called inside the jitted replay; the sharded
+    streamer calls the jitted ``grid_select_jit`` below (op-by-op eager
+    dispatch loses XLA's fused-multiply-add contraction of the score
+    arithmetic, breaking cost bitwise-parity with the local path)."""
     grid = jax.tree.map(lambda x: x.reshape((-1, P) + x.shape[1:]), metrics)
     costs = objective.costs(grid)                              # (S, P)
     costs = jnp.where(deadlocked.reshape(-1, P), jnp.inf, costs)
     return costs, jnp.argmin(costs, axis=-1)
 
 
+@functools.partial(jax.jit, static_argnames=("objective", "P"))
+def grid_select_jit(objective: Objective, metrics: DrainMetrics,
+                    deadlocked: jax.Array, P: int):
+    return grid_select(objective, metrics, deadlocked, P)
+
+
 def _replay_impl(engine: DrainEngine, states: SimState,
                  arrival_t: jax.Array, true_rt: jax.Array,
                  pool: EnginePool, valid: jax.Array,
-                 plan: HoistPlan = None):
+                 plan: HoistPlan = None,
+                 hoisted: Optional[jax.Array] = None):
     # Every slot with a finite arrival will be queued at some point
     # (plus any slot already queued at entry): the hoist domain.
     ever_queued = jnp.isfinite(arrival_t) | (states.jobs.state == QUEUED)
-    order_fn = make_order_fn(states, pool, plan, ever_queued=ever_queued)
+    order_fn = make_order_fn(states, pool, plan, ever_queued=ever_queued,
+                             hoisted=hoisted)
     res = simulate_replay_batched(
         states, arrival_t, true_rt, order_fn, engine.pass_fn(),
         dynamic_bounds=engine.dynamic_bounds,

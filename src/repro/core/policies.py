@@ -228,6 +228,15 @@ _WAIT_COL = FEATURES.index("wait")
 _XF_COL = FEATURES.index("xfactor")
 
 
+#: ``time_invariant_mask`` memo: id(leaf)-tuple -> mask.  The
+#: ``np.asarray`` over concrete pool leaves is a device sync PER
+#: DECISION CYCLE on the hot path (``engine.plan`` runs it every call);
+#: the pool arrays are immutable device buffers, so identity is a
+#: sound cache key as long as entries are evicted when the leaves die
+#: (``weakref.finalize`` below — never on raw id reuse).
+_TI_MASK_CACHE: dict = {}
+
+
 def time_invariant_mask(pool) -> np.ndarray:
     """Host-side (k,) bool: forks whose priority keys are independent
     of the clock, so their argsort can be hoisted OUT of the per-event
@@ -244,15 +253,32 @@ def time_invariant_mask(pool) -> np.ndarray:
     ``wfp``/``expf`` family forks always re-score with the current wait
     time, so they stay time-varying regardless of θ.  The mask is a
     *host* computation over concrete pool arrays — it partitions the
-    fork axis statically, before jit."""
+    fork axis statically, before jit — memoized per pool identity so
+    the repeated device->host sync disappears from the cycle loop."""
+    import weakref
+    leaves = ((pool.family, pool.theta) if isinstance(pool, PolicySpec)
+              else (pool,))
+    key = tuple(id(leaf) for leaf in leaves)
+    hit = _TI_MASK_CACHE.get(key)
+    if hit is not None:
+        return hit
     if isinstance(pool, PolicySpec):
         fam = np.asarray(pool.family).reshape(-1)
         th = np.asarray(pool.theta).reshape(fam.shape[0], -1)
-        return ((fam == FAM_LIN)
+        mask = ((fam == FAM_LIN)
                 & (th[:, _WAIT_COL] == 0.0)
                 & (th[:, _XF_COL] == 0.0))
-    ids = np.asarray(pool).reshape(-1)
-    return np.isin(ids, sorted(STATIC_KEY_IDS))
+    else:
+        ids = np.asarray(pool).reshape(-1)
+        mask = np.isin(ids, sorted(STATIC_KEY_IDS))
+    mask.setflags(write=False)
+    try:
+        for leaf in leaves:
+            weakref.finalize(leaf, _TI_MASK_CACHE.pop, key, None)
+    except TypeError:
+        return mask          # un-weakref-able leaf: serve uncached
+    _TI_MASK_CACHE[key] = mask
+    return mask
 
 
 # ----------------------------------------------------------------------

@@ -34,16 +34,17 @@ This module is the thin public API over the engine:
 from __future__ import annotations
 
 import functools
+import itertools
 from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import scoring
 from repro.core.des import drain_metrics, simulate_to_drain
 from repro.core.engine import (DEFAULT_ENGINE, Decision, DrainEngine,
-                               EnginePool)
+                               EnginePool, _quiet_donation)
 from repro.core.objective import ObjectiveLike, resolve_goal
 from repro.core.policies import (PolicyPool, PolicySpec, normalize_pool,
                                  parse_pool)
@@ -140,8 +141,67 @@ def decide_legacy_vmap(state: SimState, pool: jax.Array,
 
 
 # ----------------------------------------------------------------------
-# Fleet scale: shard the fork axis of the batched engine.
+# Fleet scale: shard the fork axis of the batched engine (DESIGN.md §9).
 # ----------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("engine", "mesh", "axis", "objective",
+                                    "plan"))
+def _decide_fleet(engine: DrainEngine, mesh: Mesh, axis: str,
+                  state: SimState, pool: EnginePool, objective, plan):
+    """The sharded decision cycle: the DRAIN runs per shard under
+    ``shard_map`` (each device forks/drains its own chunk of the pool,
+    with its own shard-local hoist plan and pass bound), the selection
+    (metrics -> costs -> argmin) runs on the concatenated result so the
+    winner is global and keeps ``select_policy``'s first-occurrence
+    tie-break over the FULL pool order."""
+    from repro.core.des import broadcast_state, drain_metrics
+    from repro.core.engine import _drain_impl, hoisted_orders, pool_size
+    from repro.launch.mesh import shard_map
+
+    n_shards = mesh.shape[axis]
+    k_local = pool_size(pool) // n_shards
+
+    if plan is None:
+        def local(st: SimState, pool_shard: EnginePool):
+            return _drain_impl(engine, broadcast_state(st, k_local),
+                               pool_shard, plan)
+
+        res = shard_map(local, mesh, in_specs=(P(), P(axis)),
+                        out_specs=P(axis))(state, pool)
+    else:
+        # Hoisted static argsorts are computed HERE, in the GSPMD region,
+        # and cross the shard boundary as a sharded input — jax 0.4
+        # miscompiles the sort if it is traced inside the shard_map body
+        # (see engine.hoisted_orders).  `plan` is shard-local; the global
+        # plan is its n_shards-fold tile, so np.nonzero enumerates each
+        # shard's time-invariant rows contiguously and P(axis) hands
+        # every device exactly its own rows.
+        states_full = broadcast_state(state, k_local * n_shards)
+        hoisted = hoisted_orders(states_full, pool, plan * n_shards,
+                                 states_full.jobs.state == QUEUED)
+
+        def local(st: SimState, pool_shard: EnginePool, hoist_shard):
+            return _drain_impl(engine, broadcast_state(st, k_local),
+                               pool_shard, plan, hoisted=hoist_shard)
+
+        res = shard_map(local, mesh, in_specs=(P(), P(axis), P(axis)),
+                        out_specs=P(axis))(state, pool, hoisted)
+
+    eval_mask = state.jobs.state == QUEUED
+    metrics = jax.vmap(drain_metrics, in_axes=(0, None))(res, eval_mask)
+    costs = objective.costs(metrics)
+    costs = jnp.where(res.deadlocked, jnp.inf, costs)
+    best = scoring.select_policy(costs)
+    return Decision(
+        policy_index=best,
+        costs=costs,
+        run_mask=res.first_started[best],
+        metrics=metrics,
+        deadlocked=res.deadlocked,
+        cost_terms=objective.cost_terms(metrics),
+    )
+
 
 def sharded_whatif(mesh: Mesh, axis: str = "data",
                    engine: Optional[DrainEngine] = None,
@@ -160,81 +220,233 @@ def sharded_whatif(mesh: Mesh, axis: str = "data",
     family vector: a 128-point parameter sweep splits across devices
     exactly like 128 distinct policies.
 
-    Static-key hoisting (DESIGN.md §7) is disabled on sharded paths:
-    the hoist gather/scatter would regroup the fork axis across shards
-    (cross-device collectives per event).  Dynamic pass bounds stay on
-    — the rank-limit max is the same kind of lock-step all-reduce the
-    loop condition already performs.  Results are bit-identical either
-    way (tests assert sharded == local).
+    Static-key hoisting (DESIGN.md §7) is SHARD-LOCAL here (§9): the
+    drain runs per device under ``shard_map``, so each shard hoists the
+    argsorts of its own chunk's time-invariant forks — no cross-shard
+    regrouping, the same gather/compact as the local engine, applied to
+    a shorter fork axis.  ``engine.shard_local_plan`` derives the local
+    plan; when the shards' chunks differ (SPMD traces one program) it
+    falls back to per-event sorting, bit-identical either way.  The
+    dynamic pass bound is likewise shard-local: a deep queue on one
+    shard no longer widens every other shard's pass.
     """
-    from repro.core.engine import _decide_impl  # the unjitted body
+    from repro.core.engine import pool_size, shard_local_plan
 
     eng = engine or DEFAULT_ENGINE
     goal = resolve_goal(objective, weights)
-    pool_sharding = NamedSharding(mesh, P(axis))
-    replicated = NamedSharding(mesh, P())
-
-    @functools.partial(jax.jit,
-                       in_shardings=(replicated, pool_sharding),
-                       out_shardings=replicated)
-    def decide_sharded(state: SimState, pool: EnginePool) -> Decision:
-        return _decide_impl(eng, state, pool, goal)
+    n_shards = mesh.shape[axis]
 
     def wrapper(state: SimState, pool: PoolArg) -> Decision:
-        return decide_sharded(state, _engine_pool(pool))
+        pool = _engine_pool(pool)
+        k = pool_size(pool)
+        if k % n_shards:
+            raise ValueError(
+                f"pool size k={k} not divisible by {n_shards}-way "
+                f"'{axis}' axis")
+        plan = shard_local_plan(eng.plan(pool), n_shards)
+        return _decide_fleet(eng, mesh, axis, state, pool, goal, plan)
 
     return wrapper
+
+
+@_quiet_donation
+@functools.partial(jax.jit,
+                   static_argnames=("engine", "mesh", "axis", "plan"),
+                   donate_argnames=("states",))
+def _replay_block_sharded(engine: DrainEngine, mesh: Mesh, axis: str,
+                          plan, states, arrival_t, true_rt, pool, valid):
+    """One fixed-shape scenario block replayed under ``shard_map``:
+    every leading (k = B·P) axis splits over ``axis``, each device
+    drains its B/n_shards scenarios with the shard-local hoist plan and
+    its own pass bound / elision / early-exit (no collectives inside
+    the event loop — shards finish independently).  The scalar
+    telemetry (``iters``/``pass_invocations``) is lifted to (1,) per
+    shard so the stacked output carries one count per device; the
+    streamer sums them.  ``states`` is donated — the per-block carry
+    updates in place across the stream."""
+    from repro.core.engine import _replay_impl, hoisted_orders
+    from repro.launch.mesh import shard_map
+
+    if plan is None:
+        def local(states, arrival_t, true_rt, pool, valid):
+            res, metrics = _replay_impl(engine, states, arrival_t,
+                                        true_rt, pool, valid, plan)
+            res = res._replace(
+                iters=res.iters.reshape(1),
+                pass_invocations=res.pass_invocations.reshape(1))
+            return res, metrics
+
+        return shard_map(local, mesh, in_specs=(P(axis),) * 5,
+                         out_specs=P(axis))(states, arrival_t, true_rt,
+                                            pool, valid)
+
+    # Hoisting on: the static argsorts cross the shard boundary as a
+    # sharded input (engine.hoisted_orders — jax 0.4 miscompiles them
+    # when traced inside the shard_map body).  `plan` is shard-local
+    # and periodic, so its n_shards-fold tile is the global plan and
+    # P(axis) gives each device its own forks' rows.
+    ever_q = jnp.isfinite(arrival_t) | (states.jobs.state == QUEUED)
+    hoisted = hoisted_orders(states, pool, plan * mesh.shape[axis],
+                             ever_q)
+
+    def local(states, arrival_t, true_rt, pool, valid, hoist_shard):
+        res, metrics = _replay_impl(engine, states, arrival_t, true_rt,
+                                    pool, valid, plan,
+                                    hoisted=hoist_shard)
+        res = res._replace(
+            iters=res.iters.reshape(1),
+            pass_invocations=res.pass_invocations.reshape(1))
+        return res, metrics
+
+    return shard_map(local, mesh, in_specs=(P(axis),) * 6,
+                     out_specs=P(axis))(states, arrival_t, true_rt,
+                                        pool, valid, hoisted)
+
+
+def _round_up(n: int, multiple: int) -> int:
+    return -(-n // multiple) * multiple
 
 
 def sharded_replay_grid(mesh: Mesh, axis: str = "data",
                         engine: Optional[DrainEngine] = None,
                         objective: ObjectiveLike = None, *,
-                        weights: Optional[scoring.ScoreWeights] = None):
+                        weights: Optional[scoring.ScoreWeights] = None,
+                        block_size: Optional[int] = None,
+                        prefetch_depth: int = 2):
     """Fleet-scale replay: the SCENARIO axis of ``engine.replay_grid``
-    sharded over ``axis`` of ``mesh`` (DESIGN.md §6).
+    sharded over ``axis`` of ``mesh`` and STREAMED in fixed-size blocks
+    (DESIGN.md §9).
 
     The flat fork axis is f = s·P + p, so sharding the leading axis of
     every input by blocks keeps each scenario's P policy forks on one
     device — scenarios are the unit of partition, the natural layout
     for multi-host what-if farms (each host replays its own futures).
-    Requires the scenario count S to be divisible by the axis size.
-    As with ``sharded_whatif``, static-key hoisting is disabled here
-    (its fork-axis regrouping fights the sharding); dynamic bounds and
-    pass elision stay on and results remain bit-identical.
 
-    Returns a function ``(scenarios: workload.ScenarioSet, pool) ->
-    ReplayOutcome`` with the same semantics as ``replay_grid``,
-    including the per-objective ``costs``/``best`` selection (computed
-    on the replicated metrics after the sharded replay — a handful of
-    (S, P)-sized device ops).
+    **Block streaming** — ``block_size`` (scenarios per device step;
+    rounded up to the axis size) bounds every device computation: an
+    S=1024 × P=100 grid runs as a pipeline of identical (B·P, J)
+    replays — ONE compiled shape, donated buffers — instead of one
+    monolithic 102 400-fork allocation.  ``None`` keeps the single-shot
+    behavior (one block of the whole set).  Any S works on any mesh:
+    the scenario axis is padded internally to the block multiple with
+    inert rows (``workload.pad_scenarios`` — born-drained forks that
+    never touch real forks' dynamics) and padded rows are dropped
+    before selection.
+
+    **Host/device overlap** — with ``prefetch_depth > 0`` the host-side
+    ingestion of block i+1 (slicing/padding — and, for iterable
+    sources, whatever synthesis the iterable performs) runs on a
+    background thread (``data.pipeline.prefetch``) while the device
+    drains block i; ``prefetch_depth=0`` ingests inline and blocks on
+    every device step (the ablation baseline).  The ingest thread is
+    numpy-only by design: a jax dispatch there (e.g. the jitted
+    ``replay_inputs`` tiling) blocks on the in-flight replay and
+    re-serializes the pipeline, so the device conversion runs on the
+    main thread between dispatches.  Results are bit-identical at any
+    depth.
+
+    **Shard-local hoisting** — the replay's hoist plan is periodic in P
+    (one pool copy per scenario), so every shard's chunk is the same
+    ``plan_P * (B / n_shards)``: each device hoists its own forks'
+    static argsorts exactly as the local engine does (DESIGN.md §7),
+    composing the compaction win with sharding bit-exactly.
+
+    ``scenarios`` may be a ``workload.ScenarioSet`` or an ITERABLE of
+    them (pre-cut blocks, e.g. generated on the fly — trace synthesis
+    then overlaps with device compute too).  Iterable blocks share one
+    job capacity J; each is padded up to the block size.
+
+    Returns a function ``(scenarios, pool) -> ReplayOutcome`` with the
+    same semantics as ``replay_grid``, including the per-objective
+    ``costs``/``best`` selection; ``iters``/``pass_invocations`` on the
+    raw result aggregate over (shard, block).
     """
-    from repro.core.engine import (_replay_impl, _shape_outcome, as_pool,
-                                   grid_select, pool_size, replay_inputs)
+    from repro.core.des import ReplayResult
+    from repro.core.engine import (_shape_outcome, as_pool,
+                                   grid_select_jit, pool_size,
+                                   replay_inputs)
+    from repro.cluster.workload import (ScenarioSet, pad_scenarios,
+                                        slice_scenarios)
+    from repro.data.pipeline import prefetch
 
     eng = engine or DEFAULT_ENGINE
     goal = resolve_goal(objective, weights)
-    sharded = NamedSharding(mesh, P(axis))
-    replicated = NamedSharding(mesh, P())
     n_shards = mesh.shape[axis]
-
-    @functools.partial(jax.jit,
-                       in_shardings=(sharded,) * 5,
-                       out_shardings=replicated)
-    def run(states, arrival_t, true_rt, pool, valid):
-        return _replay_impl(eng, states, arrival_t, true_rt, pool, valid)
 
     def wrapper(scenarios, pool: PoolArg):
         pool = as_pool(_engine_pool(pool))
-        S = int(scenarios.total_nodes.shape[0])
-        if S % n_shards:
-            raise ValueError(
-                f"S={S} scenarios not divisible by {n_shards}-way "
-                f"'{axis}' axis")
-        res, metrics = run(*replay_inputs(scenarios, pool))
-        costs, best = grid_select(goal, metrics, res.deadlocked,
-                                  pool_size(pool))
-        return _shape_outcome(res, metrics, (S, pool_size(pool)),
-                              costs, best)
+        Psz = pool_size(pool)
+        plan_P = eng.plan(pool)          # per-scenario chunk (hoisting)
+
+        if isinstance(scenarios, ScenarioSet):
+            S_real = scenarios.n_scenarios
+            B = _round_up(block_size or S_real, n_shards)
+            raw = (slice_scenarios(scenarios, lo, min(lo + B, S_real))
+                   for lo in range(0, S_real, B))
+        else:
+            raw = iter(scenarios)
+            try:
+                head = next(raw)
+            except StopIteration:
+                raise ValueError("no scenario blocks") from None
+            B = _round_up(block_size or head.n_scenarios, n_shards)
+            raw = itertools.chain([head], raw)
+            S_real = None                # discovered while streaming
+
+        plan_blk = (plan_P * (B // n_shards)
+                    if plan_P is not None else None)
+        n_reals: list = []
+
+        def ingest():
+            # numpy ONLY in this thread: jax dispatch (the jitted
+            # tiling in replay_inputs) blocks on the in-flight replay,
+            # which would serialize ingestion with device compute —
+            # the conversion runs on the main thread below instead
+            for blk in raw:
+                n = blk.n_scenarios
+                if n > B:
+                    raise ValueError(
+                        f"scenario block of {n} > block size {B}")
+                n_reals.append(n)
+                yield pad_scenarios(blk, B)
+
+        stream = ingest()
+        if prefetch_depth > 0:
+            stream = prefetch(stream, depth=prefetch_depth)
+
+        res_blocks, met_blocks = [], []
+        for padded in stream:
+            res, metrics = _replay_block_sharded(
+                eng, mesh, axis, plan_blk,
+                *replay_inputs(padded, pool))
+            if prefetch_depth <= 0:
+                jax.block_until_ready((res, metrics))
+            n_keep = n_reals[len(res_blocks)] * Psz
+            if n_keep != B * Psz:        # only partial blocks pay a trim
+                trim = lambda x: x[:n_keep]
+                res = res._replace(
+                    state=jax.tree.map(trim, res.state),
+                    events=trim(res.events),
+                    deadlocked=trim(res.deadlocked))
+                metrics = jax.tree.map(trim, metrics)
+            res_blocks.append(res)
+            met_blocks.append(metrics)
+        if not res_blocks:
+            raise ValueError("no scenario blocks")
+        S_out = sum(n_reals)
+
+        cat = (lambda *xs: xs[0] if len(xs) == 1
+               else jnp.concatenate(xs, axis=0))
+        res = ReplayResult(
+            state=jax.tree.map(cat, *[r.state for r in res_blocks]),
+            events=cat(*[r.events for r in res_blocks]),
+            iters=sum(r.iters.sum() for r in res_blocks),
+            deadlocked=cat(*[r.deadlocked for r in res_blocks]),
+            pass_invocations=sum(r.pass_invocations.sum()
+                                 for r in res_blocks))
+        metrics = jax.tree.map(cat, *met_blocks)
+        costs, best = grid_select_jit(goal, metrics, res.deadlocked, Psz)
+        return _shape_outcome(res, metrics, (S_out, Psz), costs, best)
 
     return wrapper
 

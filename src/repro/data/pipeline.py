@@ -90,14 +90,21 @@ def host_slice(batch: Dict[str, np.ndarray],
 
 
 def prefetch(it: Iterator, depth: int = 2) -> Iterator:
-    """Background-thread prefetch (overlap host datagen with compute)."""
+    """Background-thread prefetch (overlap host datagen with compute).
+
+    A worker exception is captured and re-raised in the CONSUMER (the
+    original ``finally: put(_END)`` silently truncated the stream on
+    ingest errors — a failed trace stack looked like a shorter grid)."""
     q: "queue.Queue" = queue.Queue(maxsize=depth)
     _END = object()
+    err: list = []
 
     def worker() -> None:
         try:
             for item in it:
                 q.put(item)
+        except BaseException as e:           # noqa: BLE001 — re-raised below
+            err.append(e)
         finally:
             q.put(_END)
 
@@ -106,5 +113,7 @@ def prefetch(it: Iterator, depth: int = 2) -> Iterator:
     while True:
         item = q.get()
         if item is _END:
+            if err:
+                raise err[0]
             return
         yield item

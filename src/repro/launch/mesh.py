@@ -13,12 +13,31 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 try:  # jax >= 0.5: explicit/auto axis types
     from jax.sharding import AxisType
 except ImportError:  # jax 0.4.x — meshes are implicitly "auto"
     AxisType = None
+
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` (the fleet engine's per-device
+    SPMD primitive): top-level ``jax.shard_map`` on new jax, the
+    ``jax.experimental`` spelling on 0.4.x.  Replication checking is
+    disabled where the knob exists — every fleet output is explicitly
+    sharded or reduced by the caller, and the checker predates
+    while-loop-heavy bodies like the drain."""
+    try:
+        smap = jax.shard_map                      # jax >= 0.6
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map as smap
+    try:
+        return smap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=False)
+    except TypeError:                             # knob renamed/removed
+        return smap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 def _make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
@@ -45,6 +64,20 @@ def make_host_mesh(model: Optional[int] = None) -> Mesh:
     m = model or 1
     assert n % m == 0
     return make_mesh((n // m, m), ("data", "model"))
+
+
+def make_fleet_mesh(shards: Optional[int] = None) -> Mesh:
+    """A (data=shards, model=1) mesh for the fleet replay engine
+    (``whatif.sharded_replay_grid``): scenarios shard over ``data``.
+    Defaults to every local device; unlike ``jax.make_mesh`` it accepts
+    a PREFIX of the device list, so ``--shard 2`` works on an 8-chip
+    host without reshaping the rest of the fleet away."""
+    n = len(jax.devices())
+    s = n if shards is None else int(shards)
+    if not 1 <= s <= n:
+        raise ValueError(f"shards={s} outside [1, {n}] local devices")
+    return Mesh(np.asarray(jax.devices()[:s]).reshape(s, 1),
+                ("data", "model"))
 
 
 # TPU v5e hardware constants (per chip) — the roofline denominators.

@@ -6,6 +6,8 @@
     python -m repro.launch.twin_loop --backend pallas # kernel what-ifs
     python -m repro.launch.twin_loop --trace bursty   # diurnal arrivals
     python -m repro.launch.twin_loop --replay-grid 8  # S x P baseline grid
+    python -m repro.launch.twin_loop --replay-grid 64 \\
+        --shard 0 --block-size 16      # fleet: sharded + block-streamed
     python -m repro.launch.twin_loop --objective avg_wait
     python -m repro.launch.twin_loop \\
         --objective "min:avg_wait@util>=0.85"         # constrained goal
@@ -66,13 +68,32 @@ def replay_grid(args, engine: DrainEngine, goal: Objective) -> None:
                            backend=engine.backend)
     pool = cfg.make_pool()
     scen = cfg.make_scenarios()
+    fleet = args.shard != 1 or args.block_size
+    if fleet:
+        # the fleet engine: scenario axis sharded over the mesh and/or
+        # streamed in fixed-size blocks (whatif.sharded_replay_grid,
+        # DESIGN.md §9)
+        from repro.core.whatif import sharded_replay_grid
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh(None if args.shard == 0 else args.shard)
+        run = sharded_replay_grid(mesh, engine=engine,
+                                  objective=cfg.make_objective(),
+                                  block_size=args.block_size or None,
+                                  prefetch_depth=args.prefetch)
+        mode = (f"{mesh.shape['data']} shard(s), "
+                f"block={args.block_size or 'whole set'}, "
+                f"prefetch={args.prefetch}")
     t0 = time.perf_counter()
-    out = engine.replay_grid(scen, pool.spec, cfg.make_objective())
+    if fleet:
+        out = run(scen, pool.spec)
+    else:
+        out = engine.replay_grid(scen, pool.spec, cfg.make_objective())
+        mode = "one device computation"
     np.asarray(out.end_t)  # block
     wall = time.perf_counter() - t0
     S, P = out.deadlocked.shape
     print(f"replay grid: S={S} scenarios x P={P} policies "
-          f"({S * P} forks, one device computation) in {wall:.2f}s")
+          f"({S * P} forks, {mode}) in {wall:.2f}s")
     print(f"{'policy':>16s} {'avg_wait':>9s} {'max_wait':>9s} "
           f"{'avg_sd':>7s} {'util':>6s} {'dead':>5s} {'picked':>7s}")
     m = out.metrics
@@ -123,7 +144,21 @@ def main() -> None:
                     help="evaluate an S-scenario x pool baseline grid in "
                          "one batched replay instead of running the "
                          "twin co-simulation")
+    ap.add_argument("--shard", type=int, default=1, metavar="N",
+                    help="shard the --replay-grid scenario axis over N "
+                         "devices (0: all local devices) via the fleet "
+                         "engine (whatif.sharded_replay_grid)")
+    ap.add_argument("--block-size", type=int, default=0, metavar="B",
+                    help="stream the --replay-grid in blocks of B "
+                         "scenarios per device step (0: one shot); "
+                         "bounds device memory at fleet scale")
+    ap.add_argument("--prefetch", type=int, default=2, metavar="D",
+                    help="host-side ingestion lookahead for block "
+                         "streaming (0: ingest inline, no overlap)")
     args = ap.parse_args()
+    if (args.shard != 1 or args.block_size or args.prefetch != 2) \
+            and not args.replay_grid:
+        ap.error("--shard/--block-size/--prefetch apply to --replay-grid")
     if args.replay_grid and (args.failures or args.ensemble > 1):
         ap.error("--replay-grid evaluates static baselines; --failures "
                  "and --ensemble do not apply (run the co-simulation "

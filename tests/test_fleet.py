@@ -1,0 +1,273 @@
+"""Fleet-scale sharded replay grids (DESIGN.md §9).
+
+Pins the tentpole invariants of ``whatif.sharded_replay_grid`` /
+``sharded_whatif``:
+
+- sharded == local BIT-IDENTITY with static-key hoisting ON (the PR-4
+  compaction re-enabled under sharding, shard-local plans);
+- block-streamed == one-shot (fixed-shape pipeline vs monolith);
+- non-divisible S: internal inert padding never perturbs real rows;
+- host/device overlap (``prefetch``) is pure pipelining — results are
+  bit-identical at any depth, and worker errors surface in the caller;
+- the per-``ScenarioSet`` host->device conversion cache hits on
+  identity and evicts on death;
+- a REAL ≥2-shard run (subprocess, ``--xla_force_host_platform_
+  device_count=2``) matches the unsharded oracle bitwise — this is the
+  regression net for the jax-0.4 shard_map/while_loop sort miscompile
+  that ``engine.hoisted_orders`` works around.
+"""
+import gc
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster.workload import (bursty_trace, pad_scenarios,
+                                    poisson_trace, slice_scenarios,
+                                    stack_scenarios)
+from repro.core import whatif
+from repro.core.engine import (_SCENARIO_ARRAY_CACHE, DrainEngine,
+                               _scenario_arrays, shard_local_plan)
+from repro.core.policies import parse_pool
+from repro.data.pipeline import prefetch
+from repro.launch.mesh import make_fleet_mesh
+
+from conftest import make_cluster_state
+
+REF = DrainEngine("reference")
+PAL = DrainEngine("pallas", interpret=True)
+
+
+def fleet_traces(n_traces, n_jobs=12, total_nodes=16):
+    out = []
+    for i in range(n_traces):
+        gen = bursty_trace if i % 2 else poisson_trace
+        out.append(gen(n_jobs, total_nodes, 4.0 + i,
+                       (1, total_nodes - 4), (30.0, 400.0), seed=100 + i))
+    return out
+
+
+@pytest.fixture(scope="module")
+def scen5():
+    return stack_scenarios(fleet_traces(5), 16, max_jobs=16)
+
+
+def assert_outcomes_identical(a, b, ctx=""):
+    for f in ("start_t", "end_t", "deadlocked", "events", "costs",
+              "best"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{ctx}: {f}")
+    for f in a.metrics._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.metrics, f)),
+            np.asarray(getattr(b.metrics, f)),
+            err_msg=f"{ctx}: metrics.{f}")
+
+
+# ----------------------------------------------------------------------
+# Sharded == local, hoisting on (both backends).
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("eng", [REF, PAL], ids=["ref", "pallas"])
+def test_sharded_grid_matches_local_with_hoisting(mesh11, scen5, eng):
+    assert eng.hoist_static
+    pool = parse_pool("extended,wfp:a=1..3x3")     # mixed static/varying
+    local = eng.replay_grid(scen5, pool.spec)
+    sharded = whatif.sharded_replay_grid(mesh11, engine=eng)(scen5, pool)
+    assert_outcomes_identical(sharded, local, "sharded vs local")
+
+
+def test_sharded_grid_all_static_pool(mesh11, scen5):
+    """plan.all() — the zero-per-event-sort path — under sharding."""
+    pool = parse_pool("fcfs,sjf,saf,ljf")
+    assert all(REF.plan(pool.spec))
+    local = REF.replay_grid(scen5, pool.spec)
+    sharded = whatif.sharded_replay_grid(mesh11, engine=REF)(scen5, pool)
+    assert_outcomes_identical(sharded, local, "all-static")
+
+
+# ----------------------------------------------------------------------
+# Block streaming + padding.
+# ----------------------------------------------------------------------
+
+def test_block_streamed_equals_single_shot(mesh11, scen5):
+    pool = parse_pool("extended")
+    one = whatif.sharded_replay_grid(mesh11, engine=REF)(scen5, pool)
+    blk = whatif.sharded_replay_grid(mesh11, engine=REF,
+                                     block_size=2)(scen5, pool)
+    assert_outcomes_identical(blk, one, "streamed vs one-shot")
+    assert blk.start_t.shape[:2] == (5, 7)
+
+
+def test_padding_invariance_non_divisible(mesh11, scen5):
+    """S=5 into B=2 blocks: the last block is padded with an inert
+    row; every real row must be bitwise what the unpadded local grid
+    computes, and padded rows must not leak into the outcome."""
+    pool = parse_pool("extended")
+    local = REF.replay_grid(scen5, pool.spec)
+    blk = whatif.sharded_replay_grid(mesh11, engine=REF,
+                                     block_size=2)(scen5, pool)
+    assert blk.costs.shape == (5, 7)
+    assert blk.best.shape == (5,)
+    assert_outcomes_identical(blk, local, "padded stream vs local")
+
+
+def test_overlap_determinism(mesh11, scen5):
+    pool = parse_pool("extended")
+    d0 = whatif.sharded_replay_grid(mesh11, engine=REF, block_size=2,
+                                    prefetch_depth=0)(scen5, pool)
+    d2 = whatif.sharded_replay_grid(mesh11, engine=REF, block_size=2,
+                                    prefetch_depth=2)(scen5, pool)
+    assert_outcomes_identical(d0, d2, "depth 0 vs depth 2")
+
+
+def test_iterator_block_source(mesh11, scen5):
+    """Pre-cut block iterables (on-the-fly trace synthesis) match the
+    ScenarioSet path — including a ragged final block."""
+    pool = parse_pool("extended")
+    whole = whatif.sharded_replay_grid(mesh11, engine=REF,
+                                       block_size=2)(scen5, pool)
+    blocks = (slice_scenarios(scen5, lo, min(lo + 2, 5))
+              for lo in range(0, 5, 2))
+    streamed = whatif.sharded_replay_grid(mesh11, engine=REF,
+                                          block_size=2)(blocks, pool)
+    assert_outcomes_identical(streamed, whole, "iterator vs set")
+
+
+def test_iterator_source_errors(mesh11, scen5):
+    pool = parse_pool("extended")
+    run = whatif.sharded_replay_grid(mesh11, engine=REF, block_size=2)
+    with pytest.raises(ValueError, match="no scenario blocks"):
+        run(iter(()), pool)
+    oversized = iter([scen5])                    # 5 scenarios > B=2
+    with pytest.raises(ValueError, match="block size"):
+        run(oversized, pool)
+
+
+def test_pad_scenarios_semantics(scen5):
+    assert pad_scenarios(scen5, 5) is scen5      # identity on divide
+    padded = pad_scenarios(scen5, 3)
+    assert padded.n_scenarios == 6
+    assert not padded.valid[5:].any()            # inert: born drained
+    np.testing.assert_array_equal(padded.submit_t[:5], scen5.submit_t)
+    with pytest.raises(ValueError, match="positive"):
+        pad_scenarios(scen5, 0)
+
+
+# ----------------------------------------------------------------------
+# Host-side machinery: prefetch errors, conversion cache, local plans.
+# ----------------------------------------------------------------------
+
+def test_prefetch_propagates_worker_errors():
+    def boom():
+        yield 1
+        raise RuntimeError("ingest failed")
+    it = prefetch(boom(), depth=2)
+    assert next(it) == 1
+    with pytest.raises(RuntimeError, match="ingest failed"):
+        next(it)
+
+
+def test_scenario_array_cache_hit_and_eviction():
+    scen = stack_scenarios(fleet_traces(2, n_jobs=6), 16, max_jobs=8)
+    first = _scenario_arrays(scen)
+    again = _scenario_arrays(scen)
+    assert all(x is y for x, y in zip(first, again))   # cache hit
+    key = id(scen)
+    assert key in _SCENARIO_ARRAY_CACHE
+    del scen, first, again
+    gc.collect()
+    assert key not in _SCENARIO_ARRAY_CACHE            # finalizer ran
+
+
+def test_shard_local_plan():
+    assert shard_local_plan(None, 4) is None
+    plan = (True, False, True, False)
+    assert shard_local_plan(plan, 1) == plan           # no sharding
+    assert shard_local_plan(plan, 2) == (True, False)  # periodic
+    assert shard_local_plan((True, False, False, True), 2) is None
+    assert shard_local_plan((True, False, True), 2) is None   # 3 % 2
+    assert shard_local_plan((False, False), 2) is None  # nothing to hoist
+
+
+def test_make_fleet_mesh_bounds():
+    mesh = make_fleet_mesh()
+    assert mesh.shape["model"] == 1
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="outside"):
+        make_fleet_mesh(n + 1)
+    with pytest.raises(ValueError, match="outside"):
+        make_fleet_mesh(0)
+
+
+# ----------------------------------------------------------------------
+# sharded_whatif: hoisting parity + divisibility contract.
+# ----------------------------------------------------------------------
+
+def test_sharded_whatif_hoist_parity(mesh11):
+    state = make_cluster_state(max_jobs=16, total_nodes=32, n_queued=8,
+                               n_running=3, seed=4)
+    for grammar in ("fcfs,sjf", "extended,wfp:a=1..3x3"):
+        pool = parse_pool(grammar)
+        ref = REF.decide(state, pool.spec)
+        got = whatif.sharded_whatif(mesh11, engine=REF)(state, pool)
+        for f in ("policy_index", "costs", "run_mask", "deadlocked"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, f)),
+                np.asarray(getattr(got, f)), err_msg=f"{grammar}: {f}")
+
+
+# ----------------------------------------------------------------------
+# Real ≥2-shard parity (fake CPU devices, fresh process).
+# ----------------------------------------------------------------------
+
+_TWO_DEV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax, numpy as np
+    from repro.cluster.workload import poisson_trace, stack_scenarios
+    from repro.core import whatif
+    from repro.core.engine import DrainEngine
+    from repro.core.policies import parse_pool
+    from repro.launch.mesh import make_fleet_mesh
+
+    assert len(jax.devices()) == 2
+    eng = DrainEngine("reference")
+    mesh = make_fleet_mesh(2)
+    traces = [poisson_trace(8, 16, 4.0 + i, (1, 12), (30.0, 400.0),
+                            seed=100 + i) for i in range(3)]
+    scen = stack_scenarios(traces, 16, max_jobs=16)
+    for grammar in ("fcfs,sjf", "wfp,expf,fcfs,sjf"):
+        pool = parse_pool(grammar)
+        ref = eng.replay_grid(scen, pool.spec)
+        for bs in (None, 2):
+            got = whatif.sharded_replay_grid(mesh, engine=eng,
+                                             block_size=bs)(scen, pool)
+            for f in ("start_t", "end_t", "deadlocked", "costs", "best"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ref, f)),
+                    np.asarray(getattr(got, f)),
+                    err_msg=f"{grammar} bs={bs}: {f}")
+    print("TWO_DEV_PARITY_OK")
+""")
+
+
+def test_two_shard_parity_subprocess():
+    """Hoisting under REAL sharding: 2 fake CPU devices in a fresh
+    process (device count is fixed at backend init).  Non-leading
+    shards exercise the ``hoisted_orders`` boundary-crossing fix; this
+    fails with corrupted shard-1 rows if the static argsort is ever
+    moved back inside the ``shard_map`` body."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]))
+    out = subprocess.run([sys.executable, "-c", _TWO_DEV], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "TWO_DEV_PARITY_OK" in out.stdout
