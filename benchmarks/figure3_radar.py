@@ -21,8 +21,12 @@ from repro.core.twin import SchedTwin
 TOTAL_NODES = 32
 
 
-def run_all(seed: int = 0, accuracy=(0.5, 1.0)
+def run_all(seed: int = 0, accuracy=(0.5, 1.0), fan=None
             ) -> Tuple[Dict[str, Dict[str, float]], SchedTwin]:
+    """``fan=`` (a ``FanSpec`` or int F, default off for paper parity)
+    runs the twin over an on-device Monte-Carlo fan (DESIGN.md §10);
+    decisions then carry device-computed confidence intervals surfaced
+    by ``main`` as a ``confidence`` line."""
     trace = paper_synthetic_trace(seed=seed, accuracy=accuracy)
     per: Dict[str, Dict[str, float]] = {}
     for pid in (FCFS, WFP, SJF):
@@ -33,16 +37,16 @@ def run_all(seed: int = 0, accuracy=(0.5, 1.0)
     bus = EventBus()
     em = ClusterEmulator(trace, TOTAL_NODES, bus=bus)
     twin = SchedTwin(bus=bus, qrun=em.qrun, total_nodes=TOTAL_NODES,
-                     max_jobs=em.max_jobs,
+                     max_jobs=em.max_jobs, fan=fan,
                      free_nodes_probe=lambda: em.free_nodes)
     rep = em.run(on_event=twin.pump)
     per["SchedTwin"] = rep.metric_dict()
     return per, twin
 
 
-def main(seed: int = 0) -> List[str]:
+def main(seed: int = 0, fan=None) -> List[str]:
     t0 = time.perf_counter()
-    per, twin = run_all(seed=seed)
+    per, twin = run_all(seed=seed, fan=fan)
     areas = radar_report(per)
     order = sorted(areas, key=areas.get)
     lines = []
@@ -74,6 +78,17 @@ def main(seed: int = 0) -> List[str]:
             + f"objective={twin.telemetry.cycles[0].objective},"
             + ",".join(f"{n}_area={bd_areas[n]:.3f}"
                        for n in sorted(bd_areas)))
+
+    # fan-decision confidence (device-computed per-policy CI means,
+    # Telemetry.confidence_stats; present only when fan= is given).
+    conf = twin.telemetry.confidence_stats()
+    if conf:
+        lines.append(
+            "figure3_radar,confidence,"
+            + f"fan_size={twin.telemetry.cycles[0].fan_size},"
+            + ",".join(f"{n}_ci={st['mean_ci']:.3f},"
+                       f"{n}_width={st['mean_width']:.3f}"
+                       for n, st in sorted(conf.items())))
     return lines
 
 

@@ -59,6 +59,25 @@ out = fleet(big, pool7.spec)
 print("fleet picks (S=6, blocks of 2):",
       [pool7.names[int(b)] for b in out.best])
 
+# --- risk-aware: a Monte-Carlo fan of perturbed futures --------------
+# One predicted future per cell is fragile — estimates are wrong and
+# nodes fail.  A fan (DESIGN.md §10) grows F perturbed futures per
+# (scenario, policy) ON DEVICE from the one uploaded base (runtime
+# noise, arrival-burst warps, node-failure draws; member 0 stays
+# exact) and selects by a DISTRIBUTIONAL goal: tail quantiles
+# ("p95:avg_wait"), CVaR ("cvar:0.9:score"), worst case, or regret.
+# FanOutcome.cost_ci / fan_width carry device-computed per-policy
+# confidence.  CLI: twin_loop --fan 256 --fan-noise 0.3 [--prune]
+from repro.core.fan import FanSpec
+
+fan = DrainEngine().fan_grid(
+    scenarios, pool7.spec,
+    FanSpec(n=64, runtime_noise=0.3, failure_prob=0.1),
+    "cvar:0.9:avg_wait")
+print("risk-averse picks (S=4, F=64 futures):",
+      [pool7.names[int(b)] for b in fan.best])
+print("p0 CI half-widths:", np.round(np.asarray(fan.cost_ci)[0], 1))
+
 # --- the twin: simulation-in-the-loop adaptive scheduling ------------
 # ``pool`` takes the sweep grammar (DESIGN.md §5): one what-if fork per
 # term/grid point, all drained in ONE batched engine call.  "paper" is

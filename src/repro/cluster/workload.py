@@ -59,13 +59,16 @@ def paper_synthetic_trace(seed: int = 0,
                           accuracy: Tuple[float, float] = (0.5, 1.0),
                           arrival_gap: float = PAPER_ARRIVAL_GAP,
                           phases: Sequence[Phase] = PAPER_PHASES,
+                          rng: Optional[np.random.Generator] = None,
                           ) -> List[JobSpec]:
     """The §4.1 four-phase synthetic workload (150 jobs).
 
     ``accuracy`` is the true/estimated runtime ratio range; estimates are
-    the phase walltimes.  Deterministic given ``seed``.
+    the phase walltimes.  Deterministic given ``seed``; pass ``rng=`` to
+    draw from an explicit caller-owned generator instead (resumable
+    streams — ``seed`` is then ignored).
     """
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed) if rng is None else rng
     jobs: List[JobSpec] = []
     t = 0.0
     jid = 0
@@ -108,10 +111,14 @@ def poisson_trace(n_jobs: int, total_nodes: int, mean_gap: float,
                   walltime_range: Tuple[float, float],
                   seed: int = 0,
                   accuracy: Tuple[float, float] = (0.3, 1.0),
-                  heavy_tail: bool = True) -> List[JobSpec]:
+                  heavy_tail: bool = True,
+                  rng: Optional[np.random.Generator] = None,
+                  ) -> List[JobSpec]:
     """Generic Poisson-arrival workload with (optionally) lognormal
-    walltimes — matches the wide Polaris-style variability of Figure 1."""
-    rng = np.random.default_rng(seed)
+    walltimes — matches the wide Polaris-style variability of Figure 1.
+    ``rng=`` substitutes an explicit caller-owned generator for the
+    ``seed``-derived one (deterministic, resumable streams)."""
+    rng = np.random.default_rng(seed) if rng is None else rng
     jobs: List[JobSpec] = []
     t = 0.0
     for jid in range(n_jobs):
@@ -130,7 +137,9 @@ def bursty_trace(n_jobs: int, total_nodes: int, mean_gap: float,
                  heavy_tail: bool = True,
                  period: float = 3600.0,
                  amplitude: float = 0.8,
-                 phase: float = 0.0) -> List[JobSpec]:
+                 phase: float = 0.0,
+                 rng: Optional[np.random.Generator] = None,
+                 ) -> List[JobSpec]:
     """Bursty/diurnal arrivals: a nonhomogeneous Poisson process whose
     rate is sinusoidally modulated on top of ``poisson_trace``'s flat
     rate,
@@ -142,11 +151,15 @@ def bursty_trace(n_jobs: int, total_nodes: int, mean_gap: float,
     backfill-friendly policies and aggressive aging pull apart, which a
     flat-Poisson evaluation never exercises.  ``amplitude`` in [0, 1);
     0 reduces to ``poisson_trace``'s marginal statistics.  Job sizes
-    and walltimes are drawn exactly as in ``poisson_trace``.
+    and walltimes are drawn exactly as in ``poisson_trace``.  ``rng=``
+    substitutes an explicit caller-owned generator for the
+    ``seed``-derived one — the same knob the on-device fan exposes via
+    ``FanSpec.seed``, so host traces and device fans are both
+    deterministic and resumable.
     """
     if not 0.0 <= amplitude < 1.0:
         raise ValueError(f"amplitude must be in [0, 1), got {amplitude}")
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed) if rng is None else rng
     jobs: List[JobSpec] = []
     t = 0.0
     for jid in range(n_jobs):
@@ -174,11 +187,12 @@ _ARCH_PODS = {
 
 
 def arch_job_mix(n_jobs: int, total_pods: int = 32, seed: int = 0,
-                 mean_gap: float = 30.0) -> List[JobSpec]:
+                 mean_gap: float = 30.0,
+                 rng: Optional[np.random.Generator] = None) -> List[JobSpec]:
     """Jobs for a TPU fleet: training jobs (long, many pods), prefill
     batches (short, few pods), decode services (medium).  Node counts
     come from each architecture's pod footprint (`_ARCH_PODS`)."""
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed) if rng is None else rng
     arches = list(_ARCH_PODS)
     classes = (
         ("train", 4.0, (1800.0, 7200.0)),

@@ -42,6 +42,7 @@ running job.
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, NamedTuple
 
 import jax
@@ -459,3 +460,32 @@ def state_metrics(state: SimState, eval_mask: jax.Array,
         makespan=makespan,
         utilization=jnp.clip(util, 0.0, 1.0),
     )
+
+
+# ----------------------------------------------------------------------
+# Distributional reductions over the Monte-Carlo fan axis (DESIGN.md
+# §10).  A fan evaluation stacks F perturbed futures per (scenario,
+# policy) cell on the fork axis; risk goals reduce per-member costs
+# over that axis with ORDER STATISTICS, not moments.  The fan size F is
+# static to the jits, so these index computations happen at trace time
+# and the device reduction is a plain sort + static gather — bit-exact
+# against a numpy ``np.sort`` oracle.
+# ----------------------------------------------------------------------
+
+def quantile_index(q: float, n: int) -> int:
+    """Nearest-rank quantile index into an ascending sort of ``n``
+    values: ``ceil(q·n) - 1`` clamped to ``[0, n-1]``.  Exact order
+    statistic (no interpolation): p50 of 4 members is sorted[1], p95 of
+    256 is sorted[243]."""
+    if not 0.0 < q <= 1.0:
+        raise ValueError(f"quantile must be in (0, 1], got {q!r}")
+    return min(n - 1, max(0, math.ceil(q * n) - 1))
+
+
+def cvar_tail_count(alpha: float, n: int) -> int:
+    """How many worst members the CVaR_α tail averages:
+    ``max(1, ceil((1-α)·n))``.  α=0 is the plain mean, α→1 approaches
+    the worst case; always >= 1 so the reduction is defined for any F."""
+    if not 0.0 <= alpha < 1.0:
+        raise ValueError(f"cvar alpha must be in [0, 1), got {alpha!r}")
+    return max(1, min(n, math.ceil((1.0 - alpha) * n)))

@@ -59,8 +59,10 @@ from repro.core import scoring
 from repro.core.backfill import (priority_order,
                                  schedule_pass_with_order,
                                  static_priority_order)
+from repro.core.fan import FanSpec, normalize_fan, perturb_block
 from repro.core.objective import (DEFAULT_OBJECTIVE, Objective,
-                                  ObjectiveLike, resolve_goal)
+                                  ObjectiveLike, as_distributional,
+                                  resolve_goal)
 from repro.core.des import (DrainMetrics, DrainResult, ReplayResult,
                             broadcast_state, drain_metrics,
                             simulate_replay_batched,
@@ -126,13 +128,25 @@ class Decision(NamedTuple):
     ``costs`` is the goal's compiled cost per fork (argmin = winner);
     ``cost_terms`` the goal's per-term breakdown for ALL k forks
     (``Objective.cost_terms`` — telemetry records every fork's
-    decomposition, not just the winning index)."""
+    decomposition, not just the winning index).
+
+    Fan/ensemble decisions (``decide_fan`` / ``decide_ensemble``) also
+    stamp per-policy uncertainty, computed on DEVICE from the member
+    costs (no host recompute): ``cost_ci`` is the 95% normal CI
+    half-width of the member-cost mean (``1.96·σ/√F``; +inf when any
+    member deadlocked), ``fan_width`` the full member-cost spread
+    (worst − best member; the "how sure is the twin" headline), and
+    ``fan_size`` the member count F.  Single-future decisions leave
+    them None/1."""
     policy_index: jax.Array   # index into the pool (NOT the policy id)
     costs: jax.Array          # (k,) per-policy objective cost
     run_mask: jax.Array       # bool (max_jobs,) jobs to start now (qrun set)
     metrics: DrainMetrics     # (k,)-leading metrics for telemetry
     deadlocked: jax.Array     # (k,) bool
     cost_terms: Optional[Dict[str, jax.Array]] = None  # term -> (k,)
+    cost_ci: Optional[jax.Array] = None    # (k,) 95% CI half-width
+    fan_width: Optional[jax.Array] = None  # (k,) member-cost spread
+    fan_size: int = 1                      # members behind the costs
 
 
 class ReplayOutcome(NamedTuple):
@@ -157,6 +171,29 @@ class ReplayOutcome(NamedTuple):
     result: ReplayResult      # the raw flat (k = S·P) replay result
     costs: Optional[jax.Array] = None   # objective costs (..., P)-shaped
     best: Optional[jax.Array] = None    # per-scenario winning pool index
+
+
+class FanOutcome(NamedTuple):
+    """A (scenario × fan member × policy) Monte-Carlo grid
+    (DESIGN.md §10) from ``DrainEngine.fan_grid``.
+
+    Leading axes are (S, F, P) — flat fork ``f = (s·F + φ)·P + p`` —
+    with member φ=0 the unperturbed base future.  ``member_costs`` is
+    the inner goal's cost per member (deadlocked members at +inf);
+    ``costs`` the distributional reduction over the fan axis (what the
+    argmin ``best`` selects per scenario); ``cost_ci``/``fan_width``
+    the per-(s, p) uncertainty stamps (``member_uncertainty``)."""
+    start_t: jax.Array        # f32 (S, F, P, J) — actual start times
+    end_t: jax.Array          # f32 (S, F, P, J)
+    metrics: DrainMetrics     # (S, F, P)-leading
+    deadlocked: jax.Array     # bool (S, F, P)
+    events: jax.Array         # i32 (S, F, P)
+    result: ReplayResult      # the raw flat (k = S·F·P) replay result
+    member_costs: jax.Array   # (S, F, P) inner costs per member
+    costs: jax.Array          # (S, P) reduced distributional costs
+    best: jax.Array           # (S,) per-scenario winning pool index
+    cost_ci: jax.Array        # (S, P) 95% CI half-width of member mean
+    fan_width: jax.Array      # (S, P) worst − best member cost
 
 
 # ----------------------------------------------------------------------
@@ -465,8 +502,27 @@ class DrainEngine:
                         weights: Optional[scoring.ScoreWeights] = None,
                         ) -> Decision:
         goal = resolve_goal(objective, weights)
-        return _decide_ensemble(self, state, pool, key, n_ens, noise,
-                                goal, self.plan(pool))
+        d = _decide_ensemble(self, state, pool, key, n_ens, noise,
+                             goal, self.plan(pool))
+        return d._replace(fan_size=n_ens)
+
+    def decide_fan(self, state: SimState, pool: EnginePool, fan,
+                   objective: ObjectiveLike = None, *,
+                   weights: Optional[scoring.ScoreWeights] = None
+                   ) -> Decision:
+        """One decision cycle over a Monte-Carlo fan of F perturbed
+        futures per policy (DESIGN.md §10): fork ``f = φ·k + p`` drains
+        policy p under member φ's estimate-noise and node-failure draws
+        (member 0 exact; arrival-burst warps are a replay concern — a
+        drain has no future arrivals).  ``objective`` may be
+        distributional (``"p95:avg_wait"``, ``"cvar:0.9:score"``, ...);
+        plain goals reduce by the member mean.  The returned
+        ``Decision`` carries ``cost_ci``/``fan_width``/``fan_size``.
+        ``fan`` is a ``FanSpec`` or a bare int F."""
+        goal = resolve_goal(objective, weights)
+        spec = normalize_fan(fan)
+        d = _decide_fan(self, state, pool, spec, goal, self.plan(pool))
+        return d._replace(fan_size=spec.n)
 
     # -- single pass (k=1) — the emulator's static baseline mode -------
     def schedule_pass_starts(self, state: SimState, policy) -> jax.Array:
@@ -511,6 +567,45 @@ class DrainEngine:
         res, metrics, costs, best = _replay(
             self, *inputs, plan * S if plan is not None else None, goal, P)
         return _shape_outcome(res, metrics, (S, P), costs, best)
+
+    def fan_grid(self, scenarios, pool, fan,
+                 objective: ObjectiveLike = None, *,
+                 weights: Optional[scoring.ScoreWeights] = None
+                 ) -> FanOutcome:
+        """The Monte-Carlo fan grid (DESIGN.md §10): every (scenario,
+        policy) cell of ``replay_grid`` evaluated under F perturbed
+        futures — S·F·P forks, ONE device computation, with the base
+        scenarios uploaded once and the perturbations expanded on
+        device (fork ``f = (s·F + φ)·P + p``).  ``fan`` is a
+        ``FanSpec`` (or a bare int F for a degenerate fan);
+        ``objective`` selects per scenario after the distributional
+        reduction over the fan axis.  ``FanSpec(n=1)`` (and any
+        degenerate spec) is bitwise ``replay_grid``."""
+        goal = resolve_goal(objective, weights)
+        spec = normalize_fan(fan)
+        pool = as_pool(pool)
+        S = int(scenarios.total_nodes.shape[0])
+        P = pool_size(pool)
+        plan = self.plan(pool)                 # fork f = (s·F + φ)·P + p
+        res, metrics, member, costs, best, ci, width = _fan_replay(
+            self, *_scenario_arrays(scenarios), pool,
+            plan * (S * spec.n) if plan is not None else None,
+            goal, P, S, spec)
+        shape = (S, spec.n, P)
+        rs = lambda x: x.reshape(shape + x.shape[1:])
+        return FanOutcome(
+            start_t=rs(res.state.jobs.start_t),
+            end_t=rs(res.state.jobs.end_t),
+            metrics=jax.tree.map(rs, metrics),
+            deadlocked=rs(res.deadlocked),
+            events=rs(res.events),
+            result=res,
+            member_costs=member,
+            costs=costs,
+            best=best,
+            cost_ci=ci,
+            fan_width=width,
+        )
 
 
 # ----------------------------------------------------------------------
@@ -598,10 +693,18 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
     metrics = jax.vmap(drain_metrics, in_axes=(0, None))(res, eval_mask)
     mean_metrics = jax.tree.map(
         lambda x: jnp.mean(x.reshape(n_ens, k), axis=0), metrics)
-    dead = jnp.any(res.deadlocked.reshape(n_ens, k), axis=0)
+    member_dead = res.deadlocked.reshape(n_ens, k)
+    dead = jnp.any(member_dead, axis=0)
     costs = objective.costs(mean_metrics)
     costs = jnp.where(dead, jnp.inf, costs)
     best = scoring.select_policy(costs)
+    # Per-member costs back the CI/width stamps only — selection stays
+    # the cost of the MEAN metrics, bit-identical to the pre-fan path.
+    member_costs = jnp.where(
+        member_dead, jnp.inf,
+        objective.costs(jax.tree.map(
+            lambda x: x.reshape(n_ens, k), metrics)))
+    ci, width = member_uncertainty(member_costs, axis=0)
     return Decision(
         policy_index=best,
         costs=costs,
@@ -609,6 +712,83 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
         metrics=mean_metrics,
         deadlocked=dead,
         cost_terms=objective.cost_terms(mean_metrics),
+        cost_ci=ci,
+        fan_width=width,
+    )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("engine", "spec", "objective", "plan"))
+def _decide_fan(engine: DrainEngine, state: SimState, pool: EnginePool,
+                spec: FanSpec = FanSpec(),
+                objective: Objective = DEFAULT_OBJECTIVE,
+                plan: HoistPlan = None) -> Decision:
+    """k · F forks ride ONE batch axis through ONE drain (fork
+    f = φ·k + p, the ``_decide_ensemble`` layout).  Member φ's draws
+    come from the same ``fan._member_draws`` chains as the replay fan
+    (s=0: a decision has one base snapshot), so fans are deterministic
+    and prefix-stable here too.  Perturbations with a drain-side
+    meaning: ``runtime_noise`` scales the walltime ESTIMATES (the
+    drain's predicted ends — what the twin is unsure about) and
+    ``failure_prob`` draws capacity reductions; arrival warps are
+    no-ops (drains simulate no future arrivals).  Member 0 is exact.
+    Selection is the goal's distributional reduction of the per-member
+    costs; deadlocked members cost +inf (a policy whose tail deadlocks
+    is exactly as bad as the reduction is risk-averse)."""
+    from repro.core.fan import _member_draws
+    k = pool_size(pool)
+    cap = state.jobs.capacity
+    F = spec.n
+    dist = as_distributional(objective)
+
+    states = broadcast_state(state, F * k)
+    if not spec.degenerate:
+        phi = jnp.arange(F)
+        eps, _, u = jax.vmap(
+            lambda p: _member_draws(spec.seed, jnp.int32(0), p, cap))(phi)
+        exact = phi == 0
+        if spec.runtime_noise > 0.0:
+            sig = spec.runtime_noise
+            scale = jnp.exp(sig * eps - 0.5 * sig * sig)     # (F, J)
+            est = state.jobs.est_runtime[None, :]
+            est_m = jnp.where(exact[:, None], est, est * scale)
+            states = states._replace(jobs=states.jobs._replace(
+                est_runtime=jnp.repeat(est_m, k, axis=0)))
+        if spec.failure_prob > 0.0:
+            hit = (u[:, 0] < spec.failure_prob) & ~exact
+            frac = u[:, 1] * spec.failure_frac
+            tot = states.total_nodes                          # (F·k,)
+            down = jnp.floor(
+                state.total_nodes.astype(jnp.float32) * frac)
+            down = jnp.where(hit, down.astype(tot.dtype), 0)
+            down_b = jnp.repeat(down, k)
+            states = states._replace(
+                free_nodes=jnp.maximum(states.free_nodes - down_b, 0),
+                total_nodes=jnp.maximum(tot - down_b, 1))
+
+    pool_b = tile_pool(pool, F)
+    plan_b = plan * F if plan is not None else None
+    eval_mask = state.jobs.state == QUEUED
+    res = _drain_impl(engine, states, pool_b, plan_b)
+    metrics = jax.vmap(drain_metrics, in_axes=(0, None))(res, eval_mask)
+    member_metrics = jax.tree.map(lambda x: x.reshape(F, k), metrics)
+    member_dead = res.deadlocked.reshape(F, k)
+    member_costs = jnp.where(member_dead, jnp.inf,
+                             dist.member_costs(member_metrics))
+    costs = dist.reduce_fan(member_costs)                    # (k,)
+    best = scoring.select_policy(costs)
+    ci, width = member_uncertainty(member_costs, axis=0)
+    mean_metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0),
+                                member_metrics)
+    return Decision(
+        policy_index=best,
+        costs=costs,
+        run_mask=res.first_started.reshape(F, k, cap)[0, best],
+        metrics=mean_metrics,
+        deadlocked=jnp.any(member_dead, axis=0),
+        cost_terms=dist.cost_terms(mean_metrics),
+        cost_ci=ci,
+        fan_width=width,
     )
 
 
@@ -616,12 +796,14 @@ def _decide_ensemble(engine: DrainEngine, state: SimState, pool: EnginePool,
 # Scenario-vectorized replay (DESIGN.md §6).
 # ----------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("P",))
-def _tiled_replay_inputs(submit, nodes, est, true_rt, valid, totals,
-                         pool: EnginePool, P: int):
-    """The tiling proper, jitted so the ~10 repeat/fill ops fuse into
-    one dispatch (eager per-op dispatch used to cost as much as the
-    replay itself at small S·P)."""
+def _assemble_replay_inputs(submit, nodes, est, true_rt, valid, totals,
+                            pool: EnginePool, P: int):
+    """Scenario-row arrays (S, J) -> the flat (k = S·P) replay inputs:
+    each row repeats P times (fork f = s·P + p), the pool tiles once
+    per row, and the job table is preloaded but fully INVALID.  Pure
+    ops — called inside ``_tiled_replay_inputs`` AND the fan jits
+    (where the rows are device-perturbed pseudo-scenarios), so both
+    paths assemble bit-identically."""
     rep = lambda x: jnp.repeat(x, P, axis=0)
     submit = rep(submit)                                    # (S*P, J)
     valid = rep(valid)
@@ -644,6 +826,16 @@ def _tiled_replay_inputs(submit, nodes, est, true_rt, valid, totals,
     arrival_t = jnp.where(valid, submit, jnp.inf)
     S = totals.shape[0]
     return states, arrival_t, rep(true_rt), tile_pool(pool, S), valid
+
+
+@functools.partial(jax.jit, static_argnames=("P",))
+def _tiled_replay_inputs(submit, nodes, est, true_rt, valid, totals,
+                         pool: EnginePool, P: int):
+    """The tiling proper, jitted so the ~10 repeat/fill ops fuse into
+    one dispatch (eager per-op dispatch used to cost as much as the
+    replay itself at small S·P)."""
+    return _assemble_replay_inputs(submit, nodes, est, true_rt, valid,
+                                   totals, pool, P)
 
 
 #: Per-``ScenarioSet`` memo of the UNTILED device conversions (the six
@@ -713,6 +905,50 @@ def grid_select_jit(objective: Objective, metrics: DrainMetrics,
     return grid_select(objective, metrics, deadlocked, P)
 
 
+def member_uncertainty(member_costs: jax.Array, axis: int = -2):
+    """``(ci, width)`` over the fan axis of per-member costs: the 95%
+    normal CI half-width of the member mean (``1.96·σ/√F``) and the
+    worst−best member spread.  Any non-finite member (a deadlocked
+    future) poisons both stamps to +inf — "not sure at all"."""
+    F = member_costs.shape[axis]
+    finite = jnp.all(jnp.isfinite(member_costs), axis=axis)
+    safe = jnp.where(jnp.isfinite(member_costs), member_costs, 0.0)
+    ci = 1.96 * jnp.std(safe, axis=axis) / np.sqrt(F)
+    width = (jnp.max(member_costs, axis=axis)
+             - jnp.min(member_costs, axis=axis))
+    return (jnp.where(finite, ci, jnp.inf),
+            jnp.where(finite, width, jnp.inf))
+
+
+def fan_select(objective: ObjectiveLike, metrics: DrainMetrics,
+               deadlocked: jax.Array, F: int, P: int):
+    """Distributional selection over a flat (k = S·F·P) fan batch:
+    reshape to (S, F, P), evaluate the inner goal per member
+    (deadlocked members at +inf), reduce the fan axis with the goal's
+    ``Distributional`` reduction (plain goals lift to ``mean:``), and
+    argmin per scenario.  F is static, so the sorted-reduction indices
+    are trace-time constants — pure device code, called inside the
+    fan jit (the sharded streamer uses ``fan_select_jit``).
+
+    Returns ``(member_costs (S,F,P), costs (S,P), best (S,), ci, width)``.
+    """
+    dist = as_distributional(objective)
+    grid = jax.tree.map(
+        lambda x: x.reshape((-1, F, P) + x.shape[1:]), metrics)
+    member = dist.member_costs(grid)                       # (S, F, P)
+    member = jnp.where(deadlocked.reshape(-1, F, P), jnp.inf, member)
+    costs = dist.reduce_fan(member)                        # (S, P)
+    best = jnp.argmin(costs, axis=-1)
+    ci, width = member_uncertainty(member, axis=-2)
+    return member, costs, best, ci, width
+
+
+@functools.partial(jax.jit, static_argnames=("objective", "F", "P"))
+def fan_select_jit(objective: Objective, metrics: DrainMetrics,
+                   deadlocked: jax.Array, F: int, P: int):
+    return fan_select(objective, metrics, deadlocked, F, P)
+
+
 def _replay_impl(engine: DrainEngine, states: SimState,
                  arrival_t: jax.Array, true_rt: jax.Array,
                  pool: EnginePool, valid: jax.Array,
@@ -743,6 +979,30 @@ def _replay(engine: DrainEngine, states: SimState, arrival_t: jax.Array,
                                 valid, plan)
     costs, best = grid_select(objective, metrics, res.deadlocked, P)
     return res, metrics, costs, best
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("engine", "plan", "objective", "P",
+                                    "S", "spec"))
+def _fan_replay(engine: DrainEngine, submit, nodes, est, true_rt, valid,
+                totals, pool: EnginePool, plan: HoistPlan = None,
+                objective: Objective = DEFAULT_OBJECTIVE, P: int = 1,
+                S: int = 1, spec: FanSpec = FanSpec()):
+    """The fused fan: perturbation expansion + (S·F·P)-fork replay +
+    distributional selection in ONE compiled computation.  Only the
+    UNTILED base (S, J) arrays cross host->device — H2D is O(1) in F —
+    and every expanded buffer is born inside the jit, so XLA reuses it
+    in place without donation bookkeeping."""
+    g = jnp.arange(S * spec.n)
+    rows = perturb_block(submit, nodes, est, true_rt, valid, totals,
+                         spec, g, S)
+    states, arrival_t, true_rep, pool_t, valid_rep = \
+        _assemble_replay_inputs(*rows, pool, P)
+    res, metrics = _replay_impl(engine, states, arrival_t, true_rep,
+                                pool_t, valid_rep, plan)
+    member, costs, best, ci, width = fan_select(
+        objective, metrics, res.deadlocked, spec.n, P)
+    return res, metrics, member, costs, best, ci, width
 
 
 def _shape_outcome(res: ReplayResult, metrics: DrainMetrics, shape,

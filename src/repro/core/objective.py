@@ -37,6 +37,22 @@ knob — so the goal is lifted into a first-class **``Objective``**:
                                        >= 0.85; if NO fork is feasible,
                                        fall back to least total
                                        constraint violation
+      "p95:avg_wait"                   distributional (fan goals,
+      "cvar:0.9:avg_wait"              DESIGN.md §10): reduce an inner
+      "worst:score"                    goal's per-member costs over the
+      "regret:avg_wait"                Monte-Carlo fan axis — nearest-
+      "mean:avg_wait"                  rank quantile, CVaR (mean of the
+                                       worst (1-α)·F members), max,
+                                       minimax regret, or mean — BEFORE
+                                       the per-scenario argmin
+
+Distributional goals wrap any base goal (the prefix must be outermost
+and cannot nest) and only change selection when a fan axis exists
+(``engine.fan_grid`` / ``decide_fan``); under a plain decide/replay
+they degenerate to the inner goal.  The fan size F is static to the
+jit, so the sorted-reduction indices (``des.quantile_index`` /
+``des.cvar_tail_count``) are trace-time constants — selection stays
+inside the compiled computation.
 
 Rank-based goals (``lex:``/``min:...@``) compose **dense ranks** along
 the candidate axis — ``r[i] = #{j : v[j] < v[i]}``, an O(k²)
@@ -56,6 +72,7 @@ it.
 from __future__ import annotations
 
 import dataclasses
+import re
 import warnings
 from typing import (Callable, Dict, Mapping, Optional, Sequence, Tuple,
                     Union)
@@ -65,16 +82,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scoring
-from repro.core.des import DrainMetrics
+from repro.core.des import DrainMetrics, cvar_tail_count, quantile_index
 from repro.core.scoring import PAPER_WEIGHTS, ScoreWeights
 
 __all__ = [
     "Objective", "PaperScore", "Weighted", "Lexicographic", "Constraint",
-    "Constrained", "ObjectiveLike", "DEFAULT_OBJECTIVE", "METRICS",
-    "REWARD_METRICS", "parse_objective", "validate_objective",
-    "normalize_objective", "resolve_goal", "register_objective",
-    "registered_objectives", "metric_cost", "metrics_from_rows",
-    "report_costs",
+    "Constrained", "Distributional", "ObjectiveLike", "DEFAULT_OBJECTIVE",
+    "METRICS", "REWARD_METRICS", "parse_objective", "validate_objective",
+    "normalize_objective", "resolve_goal", "as_distributional",
+    "register_objective", "registered_objectives", "metric_cost",
+    "metrics_from_rows", "report_costs",
 ]
 
 #: Metric fields an objective may reference — the ``DrainMetrics``
@@ -343,6 +360,124 @@ class Constrained(Objective):
                 + "".join("@" + c.spec for c in self.constraints))
 
 
+_REDUCTIONS = ("mean", "worst", "regret", "quantile", "cvar")
+
+
+def _fmt_level(v: float) -> str:
+    """Exact round-trip float formatting with the trailing ``.0``
+    dropped, so canonical specs read ``p95:`` rather than ``p95.0:``."""
+    s = _fmt(v)
+    return s[:-2] if s.endswith(".0") else s
+
+
+@dataclasses.dataclass(frozen=True)
+class Distributional(Objective):
+    """A risk reduction of an inner goal over the Monte-Carlo fan axis
+    (DESIGN.md §10).
+
+    ``member_costs`` evaluates the inner goal per fan member (the
+    candidate axis stays last, so rank-based inner goals compose ranks
+    *within* each member), and ``reduce_fan`` collapses the fan axis
+    (second-to-last) with the chosen reduction:
+
+    * ``quantile`` — nearest-rank order statistic (``p95:`` = sorted
+      member ``ceil(0.95·F) - 1``); exact, no interpolation, so device
+      f32 results match a numpy oracle bitwise;
+    * ``cvar``     — mean of the worst ``max(1, ceil((1-α)·F))`` sorted
+      members (``α`` in ``level``): expected cost in the tail;
+    * ``worst``    — max over members (robust / adversarial);
+    * ``regret``   — minimax regret: per member subtract the best
+      candidate's cost (common-random-number futures make the per-member
+      min meaningful), then max over members;
+    * ``mean``     — the risk-neutral default a plain goal lifts to
+      under a fan (``as_distributional``).
+
+    Deadlocked members carry ``+inf`` member costs, so a policy whose
+    tail deadlocks is poisoned exactly as far into the distribution as
+    the reduction looks (p50 forgives a rare deadlock, ``worst:`` never
+    does).  Without a fan axis (plain decide/replay), ``costs`` / ``
+    cost_terms`` degenerate to the inner goal.
+    """
+    reduction: str
+    inner: Objective
+    level: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.reduction not in _REDUCTIONS:
+            raise ValueError(f"unknown fan reduction {self.reduction!r}; "
+                             f"have {_REDUCTIONS}")
+        if isinstance(self.inner, Distributional):
+            raise ValueError("distributional reductions cannot nest: "
+                             "there is only one fan axis")
+        if self.reduction == "quantile" and not 0.0 < self.level <= 100.0:
+            raise ValueError(
+                f"quantile level must be in (0, 100], got {self.level!r}")
+        if self.reduction == "cvar" and not 0.0 <= self.level < 1.0:
+            raise ValueError(
+                f"cvar alpha must be in [0, 1), got {self.level!r}")
+        if self.reduction in ("mean", "worst", "regret") and self.level:
+            raise ValueError(
+                f"{self.reduction}: takes no level, got {self.level!r}")
+
+    @property
+    def elementwise(self) -> bool:  # type: ignore[override]
+        return self.inner.elementwise
+
+    # -- fan-axis interface (engine.fan_select) ------------------------
+
+    def member_costs(self, metrics: DrainMetrics) -> jax.Array:
+        """Inner costs per fan member — metrics shaped ``(..., F, k)``,
+        candidates last, fan second-to-last."""
+        return self.inner.costs(metrics)
+
+    def reduce_fan(self, member_costs: jax.Array) -> jax.Array:
+        """``(..., F, k)`` member costs -> ``(..., k)`` reduced costs.
+        F is a trace-time constant, so the sorted-reduction indices are
+        static — the whole reduction compiles into the selection jit."""
+        F = member_costs.shape[-2]
+        if self.reduction == "mean":
+            return jnp.mean(member_costs, axis=-2)
+        if self.reduction == "worst":
+            return jnp.max(member_costs, axis=-2)
+        if self.reduction == "regret":
+            best = jnp.min(member_costs, axis=-1, keepdims=True)
+            reg = jnp.where(jnp.isfinite(member_costs),
+                            member_costs - best, jnp.inf)
+            return jnp.max(reg, axis=-2)
+        srt = jnp.sort(member_costs, axis=-2)
+        if self.reduction == "quantile":
+            return srt[..., quantile_index(self.level / 100.0, F), :]
+        m = cvar_tail_count(self.level, F)
+        return jnp.mean(srt[..., F - m:, :], axis=-2)
+
+    # -- degenerate (no fan axis) interface ----------------------------
+
+    def costs(self, metrics: DrainMetrics) -> jax.Array:
+        return self.inner.costs(metrics)
+
+    def cost_terms(self, metrics: DrainMetrics) -> Dict[str, jax.Array]:
+        return self.inner.cost_terms(metrics)
+
+    @property
+    def spec(self) -> str:
+        if self.reduction == "quantile":
+            return f"p{_fmt_level(self.level)}:{self.inner.spec}"
+        if self.reduction == "cvar":
+            return f"cvar:{_fmt_level(self.level)}:{self.inner.spec}"
+        return f"{self.reduction}:{self.inner.spec}"
+
+
+def as_distributional(objective: "ObjectiveLike") -> Distributional:
+    """Lift any goal to a fan goal: distributional goals pass through,
+    anything else wraps in the risk-neutral ``mean:`` reduction (so a
+    plain ``"score"`` under an F=1 fan selects bit-identically to the
+    fan-less path: the mean over a singleton axis is the identity)."""
+    obj = normalize_objective(objective)
+    if isinstance(obj, Distributional):
+        return obj
+    return Distributional("mean", obj)
+
+
 #: The administrator default: the paper's own goal.
 DEFAULT_OBJECTIVE = PaperScore()
 
@@ -430,6 +565,36 @@ def _parse_constraint(text: str) -> Constraint:
         f"metric<=bound")
 
 
+_QUANTILE_RE = re.compile(r"^p(\d+(?:\.\d+)?):(.+)$", re.IGNORECASE)
+
+
+def _match_distributional(
+        text: str) -> Optional[Tuple[str, float, str]]:
+    """``(reduction, level, inner_body)`` if ``text`` starts with a
+    distributional prefix, else None.  Malformed prefixes (``cvar:``
+    without an alpha) raise."""
+    low = text.lower()
+    for red in ("mean", "worst", "regret"):
+        if low.startswith(red + ":"):
+            return red, 0.0, text[len(red) + 1:]
+    if low.startswith("cvar:"):
+        rest = text[5:]
+        if ":" not in rest:
+            raise ValueError(
+                f"bad cvar goal {text!r}; expected cvar:ALPHA:goal "
+                f"(e.g. cvar:0.9:avg_wait)")
+        a_s, body = rest.split(":", 1)
+        try:
+            alpha = float(a_s)
+        except ValueError:
+            raise ValueError(f"bad cvar alpha {a_s!r} in {text!r}")
+        return "cvar", alpha, body
+    m = _QUANTILE_RE.match(text)
+    if m:
+        return "quantile", float(m.group(1)), m.group(2)
+    return None
+
+
 def parse_objective(grammar: str) -> Objective:
     """Parse a goal grammar string (module docstring) into an
     ``Objective``.  ``obj.spec`` (== ``str(obj)``) round-trips:
@@ -437,6 +602,17 @@ def parse_objective(grammar: str) -> Objective:
     text = grammar.strip()
     if not text:
         raise ValueError("empty objective grammar")
+    dist = _match_distributional(text)
+    if dist is not None:
+        red, level, body = dist
+        body = body.strip()
+        if not body:
+            raise ValueError(f"empty inner goal in {text!r}")
+        if _match_distributional(body) is not None:
+            raise ValueError(
+                f"distributional reductions cannot nest ({text!r}): "
+                f"there is only one fan axis")
+        return Distributional(red, parse_objective(body), level)
     low = text.lower()
     if low.startswith("lex:"):
         body = text[4:]

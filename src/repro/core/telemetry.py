@@ -21,6 +21,14 @@ class CycleRecord:
     objective: str = "score"
     term_costs: Dict[str, Dict[str, float]] = dataclasses.field(
         default_factory=dict)
+    # fan/ensemble uncertainty, stamped on DEVICE by decide_fan /
+    # decide_ensemble (DESIGN.md §10) — never recomputed on the host.
+    # cost_ci: per-policy 95% CI half-width of the member-cost mean;
+    # fan_width: per-policy member-cost spread (worst − best member);
+    # fan_size: member count F (1 = single-future decision, no fan).
+    cost_ci: Dict[str, float] = dataclasses.field(default_factory=dict)
+    fan_width: Dict[str, float] = dataclasses.field(default_factory=dict)
+    fan_size: int = 1
 
 
 @dataclasses.dataclass
@@ -61,6 +69,33 @@ class Telemetry:
                     acc[term] = acc.get(term, 0.0) + v
         return {pol: {term: s / counts[pol] for term, s in acc.items()}
                 for pol, acc in sums.items()}
+
+    # ---- fan uncertainty (DESIGN.md §10) ------------------------------
+    def confidence_stats(self) -> Dict[str, Dict[str, float]]:
+        """Mean device-computed uncertainty per policy across all fan
+        cycles (policy -> {mean_ci, mean_width, n}); cycles whose CI is
+        infinite (a fan member deadlocked) are counted separately as
+        ``n_inf`` rather than polluting the means.  Empty when no cycle
+        ran a fan/ensemble."""
+        acc: Dict[str, Dict[str, float]] = {}
+        for c in self.cycles:
+            if c.fan_size <= 1 or not c.cost_ci:
+                continue
+            for pol, ci in c.cost_ci.items():
+                st = acc.setdefault(pol, {"mean_ci": 0.0, "mean_width": 0.0,
+                                          "n": 0, "n_inf": 0})
+                width = c.fan_width.get(pol, float("inf"))
+                if ci == float("inf") or width == float("inf"):
+                    st["n_inf"] += 1
+                    continue
+                st["mean_ci"] += ci
+                st["mean_width"] += width
+                st["n"] += 1
+        for st in acc.values():
+            n = max(int(st["n"]), 1)
+            st["mean_ci"] /= n
+            st["mean_width"] /= n
+        return acc
 
     # ---- overhead (paper: "a few seconds per scheduling cycle") -------
     def cycle_latency_stats(self) -> Dict[str, float]:

@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import sync, telemetry
 from repro.core.engine import DrainEngine
 from repro.core.events import Event, EventBus, EventKind
+from repro.core.fan import FanSpec, normalize_fan
 from repro.core.objective import ObjectiveLike, resolve_goal
 from repro.core.policies import PAPER_POOL, PoolLike, normalize_pool
 from repro.core.scoring import ScoreWeights
@@ -58,6 +59,14 @@ class SchedTwin:
         lifts to the bit-identical paper-score objective (with a
         ``DeprecationWarning``).
     ensemble : if > 1, use uncertainty-ensemble decisions (beyond paper).
+    fan : optional ``fan.FanSpec`` (or bare int F) — decide over an
+        on-device Monte-Carlo fan of F perturbed futures per policy
+        (DESIGN.md §10) instead of the single nominal future; pairs
+        naturally with a distributional ``objective``
+        (``"p95:avg_wait"``, ``"cvar:0.9:score"``).  Decisions then
+        carry device-computed per-policy confidence intervals, recorded
+        in telemetry with no host recompute.  Mutually exclusive with
+        ``ensemble > 1``.
     engine : the policy-batched what-if engine (``core.engine``); pick
         the scheduling-pass backend here (``DrainEngine("pallas")`` for
         the TPU kernel, ``DrainEngine("auto")`` to pick per platform).
@@ -77,8 +86,11 @@ class SchedTwin:
                  free_nodes_probe: Optional[Callable[[], int]] = None,
                  ensemble: int = 1,
                  ensemble_noise: float = 0.3,
+                 fan: Optional[FanSpec] = None,
                  engine: Optional[DrainEngine] = None,
                  seed: int = 0) -> None:
+        if fan is not None and ensemble > 1:
+            raise ValueError("fan= and ensemble>1 are mutually exclusive")
         self.bus = bus
         self.qrun = qrun
         self.pool = normalize_pool(pool)
@@ -88,6 +100,7 @@ class SchedTwin:
         self.free_nodes_probe = free_nodes_probe
         self.ensemble = ensemble
         self.ensemble_noise = ensemble_noise
+        self.fan = normalize_fan(fan) if fan is not None else None
         self.engine = engine if engine is not None else DrainEngine()
         self._key = jax.random.PRNGKey(seed)
 
@@ -121,7 +134,11 @@ class SchedTwin:
                 self.state, self.free_nodes_probe())
 
         with telemetry.StopWatch() as sw:
-            if self.ensemble > 1:
+            if self.fan is not None:
+                decision = self.engine.decide_fan(
+                    self.state, self.pool.spec, self.fan,
+                    objective=self.objective)
+            elif self.ensemble > 1:
                 self._key, sub = jax.random.split(self._key)
                 decision = self.engine.decide_ensemble(
                     self.state, self.pool.spec, sub,
@@ -148,10 +165,24 @@ class SchedTwin:
         term_costs = {name: {term: float(v[i])
                              for term, v in term_arrays.items()}
                       for i, name in enumerate(self.pool.names)}
+        # fan/ensemble decisions carry device-computed per-policy
+        # uncertainty (DESIGN.md §10); record it as-is, no host math.
+        cost_ci = {}
+        fan_width = {}
+        if decision.cost_ci is not None:
+            cost_ci = {name: float(c)
+                       for name, c in zip(self.pool.names,
+                                          np.asarray(decision.cost_ci))}
+        if decision.fan_width is not None:
+            fan_width = {name: float(w)
+                         for name, w in zip(self.pool.names,
+                                            np.asarray(decision.fan_width))}
         self.telemetry.record(telemetry.CycleRecord(
             time=t, wall_seconds=sw.seconds, policy=winner,
             costs=costs, n_started=len(job_ids), started_jobs=job_ids,
-            objective=str(self.objective), term_costs=term_costs))
+            objective=str(self.objective), term_costs=term_costs,
+            cost_ci=cost_ci, fan_width=fan_width,
+            fan_size=decision.fan_size))
 
         if job_ids:
             # ⑦ qrun — the physical system will emit RUNJOB events that

@@ -53,7 +53,7 @@ from repro.core.state import QUEUED, SimState
 __all__ = [
     "Decision", "PolicyPool", "decide", "decide_ensemble",
     "decide_legacy_vmap", "sharded_whatif", "sharded_replay_grid",
-    "paper_pool", "pool_array",
+    "sharded_fan_grid", "paper_pool", "pool_array",
 ]
 
 #: Anything the public decide functions take as a pool.
@@ -447,6 +447,118 @@ def sharded_replay_grid(mesh: Mesh, axis: str = "data",
         metrics = jax.tree.map(cat, *met_blocks)
         costs, best = grid_select_jit(goal, metrics, res.deadlocked, Psz)
         return _shape_outcome(res, metrics, (S_out, Psz), costs, best)
+
+    return wrapper
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "P", "B", "S"))
+def _fan_block_inputs(submit, nodes, est, true_rt, valid, totals, pool,
+                      spec, P, B, S, lo):
+    """One fixed-shape fan block, expanded ON DEVICE: pseudo-scenarios
+    ``g = lo .. lo+B`` (``g = s·F + φ``; ids past S·F are inert
+    padding) perturbed from the shared base arrays and assembled into
+    donatable (B·P)-fork replay inputs.  ``lo`` is a dynamic operand —
+    every block reuses ONE compiled expansion."""
+    from repro.core.engine import _assemble_replay_inputs
+    from repro.core.fan import perturb_block
+    g = lo + jnp.arange(B)
+    rows = perturb_block(submit, nodes, est, true_rt, valid, totals,
+                         spec, g, S)
+    return _assemble_replay_inputs(*rows, pool, P)
+
+
+def sharded_fan_grid(mesh: Mesh, axis: str = "data",
+                     engine: Optional[DrainEngine] = None,
+                     objective: ObjectiveLike = None, *,
+                     fan=None,
+                     block_size: Optional[int] = None):
+    """Fleet-scale Monte-Carlo fans (DESIGN.md §§9–10): the
+    ``engine.fan_grid`` pseudo-scenario axis (``g = s·F + φ``, G = S·F
+    rows) sharded over ``axis`` of ``mesh`` and streamed in fixed-size
+    blocks, exactly like ``sharded_replay_grid`` streams scenarios.
+
+    The fan stacks on the PR-6 block machinery unchanged because fan
+    members ARE pseudo-scenarios: hoist plans stay P-periodic
+    (``plan_P · (B / n_shards)`` per shard), padding rows are inert,
+    and ``_replay_block_sharded`` is reused as is.  What changes is
+    ingestion: there is NO host ingest thread to overlap — each block
+    is expanded on device from the one uploaded base (H2D stays O(1)
+    in F), so blocks dispatch back-to-back and jax's async dispatch
+    pipelines them.  Fan member draws are keyed per (s, φ)
+    independently of the block cut, so any ``block_size`` is
+    bit-identical to the one-shot ``fan_grid``.
+
+    ``fan`` is a ``FanSpec`` (or bare int F); ``block_size`` counts
+    pseudo-scenarios per device step (i.e. ``block_size // F`` base
+    scenarios), rounded up to the axis size.  Returns a function
+    ``(scenarios, pool) -> FanOutcome``.
+    """
+    from repro.core.des import ReplayResult
+    from repro.core.engine import (FanOutcome, _scenario_arrays, as_pool,
+                                   fan_select_jit, pool_size)
+    from repro.core.fan import normalize_fan
+
+    eng = engine or DEFAULT_ENGINE
+    goal = resolve_goal(objective)
+    spec = normalize_fan(fan if fan is not None else 1)
+    n_shards = mesh.shape[axis]
+
+    def wrapper(scenarios, pool: PoolArg) -> "FanOutcome":
+        pool = as_pool(_engine_pool(pool))
+        Psz = pool_size(pool)
+        S = int(scenarios.total_nodes.shape[0])
+        G = S * spec.n
+        B = _round_up(block_size or G, n_shards)
+        plan_P = eng.plan(pool)
+        plan_blk = (plan_P * (B // n_shards)
+                    if plan_P is not None else None)
+        base = _scenario_arrays(scenarios)
+
+        res_blocks, met_blocks = [], []
+        for lo in range(0, G, B):
+            inputs = _fan_block_inputs(*base, pool, spec, Psz, B, S,
+                                       jnp.int32(lo))
+            res, metrics = _replay_block_sharded(
+                eng, mesh, axis, plan_blk, *inputs)
+            n_keep = (min(lo + B, G) - lo) * Psz
+            if n_keep != B * Psz:        # only the tail block pays a trim
+                trim = lambda x: x[:n_keep]
+                res = res._replace(
+                    state=jax.tree.map(trim, res.state),
+                    events=trim(res.events),
+                    deadlocked=trim(res.deadlocked))
+                metrics = jax.tree.map(trim, metrics)
+            res_blocks.append(res)
+            met_blocks.append(metrics)
+
+        cat = (lambda *xs: xs[0] if len(xs) == 1
+               else jnp.concatenate(xs, axis=0))
+        res = ReplayResult(
+            state=jax.tree.map(cat, *[r.state for r in res_blocks]),
+            events=cat(*[r.events for r in res_blocks]),
+            iters=sum(r.iters.sum() for r in res_blocks),
+            deadlocked=cat(*[r.deadlocked for r in res_blocks]),
+            pass_invocations=sum(r.pass_invocations.sum()
+                                 for r in res_blocks))
+        metrics = jax.tree.map(cat, *met_blocks)
+        member, costs, best, ci, width = fan_select_jit(
+            goal, metrics, res.deadlocked, spec.n, Psz)
+        shape = (S, spec.n, Psz)
+        rs = lambda x: x.reshape(shape + x.shape[1:])
+        return FanOutcome(
+            start_t=rs(res.state.jobs.start_t),
+            end_t=rs(res.state.jobs.end_t),
+            metrics=jax.tree.map(rs, metrics),
+            deadlocked=rs(res.deadlocked),
+            events=rs(res.events),
+            result=res,
+            member_costs=member,
+            costs=costs,
+            best=best,
+            cost_ci=ci,
+            fan_width=width,
+        )
 
     return wrapper
 

@@ -11,6 +11,10 @@
     python -m repro.launch.twin_loop --objective avg_wait
     python -m repro.launch.twin_loop \\
         --objective "min:avg_wait@util>=0.85"         # constrained goal
+    python -m repro.launch.twin_loop --fan 64 --fan-noise 0.3 \\
+        --objective "p95:avg_wait"    # Monte-Carlo fan, tail objective
+    python -m repro.launch.twin_loop --replay-grid 8 --fan 128 \\
+        --fan-fail 0.2 --objective "cvar:0.9:score" --prune
 
 ``--objective`` is the administrator-configured optimization goal
 (§3.4; ``repro.core.objective``, DESIGN.md §8): the goal grammar is
@@ -22,6 +26,17 @@ logged at startup.  In twin mode it drives every decision cycle; in
 full (S scenarios × pool) baseline grid in ONE batched device replay
 (``engine.replay_grid``, DESIGN.md §6), printing per-policy metrics
 aggregated over scenarios.
+
+``--fan F`` evaluates every policy over an on-device Monte-Carlo fan
+of F perturbed futures (DESIGN.md §10) — runtime noise
+(``--fan-noise``), arrival-burst warps (``--fan-burst``), node-failure
+draws (``--fan-fail``), deterministically keyed by ``--fan-seed``.
+One base scenario is uploaded; the fan is expanded inside the jit, so
+H2D traffic stays O(1) in F.  In twin mode decisions gain
+device-computed confidence intervals (logged per cycle); in
+``--replay-grid`` mode the grid becomes S × F × P and ``--prune``
+turns on the goal-conditioned low-F pre-pass that drops dominated
+policies before the full fan.
 
 ``--pool`` takes the sweep grammar (``repro.core.policies.parse_pool``):
 one fork per grid point, e.g. a DRAS-style 25-point parameter sweep
@@ -41,6 +56,7 @@ from repro.cluster.workload import (bursty_trace, paper_synthetic_trace,
                                     poisson_trace)
 from repro.core.engine import PASS_BACKENDS, DrainEngine
 from repro.core.events import EventBus
+from repro.core.fan import FanSpec
 from repro.core.objective import Objective, validate_objective
 from repro.core.policies import parse_pool
 from repro.core.twin import SchedTwin
@@ -55,9 +71,19 @@ def resolve_objective(grammar: str) -> Objective:
         raise SystemExit(str(e))
 
 
+def make_fan(args) -> "FanSpec | None":
+    """Build the ``FanSpec`` from the --fan* flags (None when off)."""
+    if not args.fan:
+        return None
+    return FanSpec(n=args.fan, runtime_noise=args.fan_noise,
+                   burst_amplitude=args.fan_burst,
+                   failure_prob=args.fan_fail, seed=args.fan_seed)
+
+
 def replay_grid(args, engine: DrainEngine, goal: Objective) -> None:
     """--replay-grid: the S × P baseline grid as ONE device replay,
-    with the per-scenario policy selection under ``goal``."""
+    with the per-scenario policy selection under ``goal`` (S × F × P
+    with --fan: every policy judged over F perturbed futures)."""
     import time
 
     from repro.configs.schedtwin import ReplayGridConfig
@@ -68,46 +94,83 @@ def replay_grid(args, engine: DrainEngine, goal: Objective) -> None:
                            backend=engine.backend)
     pool = cfg.make_pool()
     scen = cfg.make_scenarios()
+    fan = make_fan(args)
     fleet = args.shard != 1 or args.block_size
+    prune_info = None
     if fleet:
         # the fleet engine: scenario axis sharded over the mesh and/or
-        # streamed in fixed-size blocks (whatif.sharded_replay_grid,
-        # DESIGN.md §9)
-        from repro.core.whatif import sharded_replay_grid
+        # streamed in fixed-size blocks (whatif.sharded_replay_grid /
+        # sharded_fan_grid, DESIGN.md §§9–10)
+        from repro.core.whatif import sharded_fan_grid, sharded_replay_grid
         from repro.launch.mesh import make_fleet_mesh
         mesh = make_fleet_mesh(None if args.shard == 0 else args.shard)
-        run = sharded_replay_grid(mesh, engine=engine,
-                                  objective=cfg.make_objective(),
-                                  block_size=args.block_size or None,
-                                  prefetch_depth=args.prefetch)
+        if fan is not None:
+            run = sharded_fan_grid(mesh, engine=engine,
+                                   objective=cfg.make_objective(), fan=fan,
+                                   block_size=args.block_size or None)
+        else:
+            run = sharded_replay_grid(mesh, engine=engine,
+                                      objective=cfg.make_objective(),
+                                      block_size=args.block_size or None,
+                                      prefetch_depth=args.prefetch)
         mode = (f"{mesh.shape['data']} shard(s), "
                 f"block={args.block_size or 'whole set'}, "
                 f"prefetch={args.prefetch}")
     t0 = time.perf_counter()
     if fleet:
         out = run(scen, pool.spec)
+    elif fan is not None and args.prune:
+        from repro.core.fan import pruned_fan_grid
+        out, prune_info = pruned_fan_grid(scen, pool.spec, fan,
+                                          cfg.make_objective(),
+                                          engine=engine)
+        mode = "one device computation, pruned"
+    elif fan is not None:
+        out = engine.fan_grid(scen, pool.spec, fan, cfg.make_objective())
+        mode = "one device computation"
     else:
         out = engine.replay_grid(scen, pool.spec, cfg.make_objective())
         mode = "one device computation"
     np.asarray(out.end_t)  # block
     wall = time.perf_counter() - t0
-    S, P = out.deadlocked.shape
-    print(f"replay grid: S={S} scenarios x P={P} policies "
-          f"({S * P} forks, {mode}) in {wall:.2f}s")
+    S = int(out.deadlocked.shape[0])
+    P = int(out.deadlocked.shape[-1])
+    fan_txt = (f" x F={fan.n} fan members" if fan is not None else "")
+    print(f"replay grid: S={S} scenarios{fan_txt} x P={P} policies "
+          f"({int(np.prod(out.deadlocked.shape))} forks, {mode}) "
+          f"in {wall:.2f}s")
+    if prune_info is not None:
+        kept = [pool.names[int(i)] for i in np.asarray(prune_info.keep)]
+        print(f"prune: pre-pass F={prune_info.pre_members.shape[1]} "
+              f"dropped {prune_info.rate * 100:.0f}% of the pool; "
+              f"kept {kept}")
     print(f"{'policy':>16s} {'avg_wait':>9s} {'max_wait':>9s} "
           f"{'avg_sd':>7s} {'util':>6s} {'dead':>5s} {'picked':>7s}")
-    m = out.metrics
-    best = np.asarray(out.best)                 # per-scenario selection
-    for p, name in enumerate(pool.names):
+    m = out.metrics                 # (S, P), or (S, F, P) under --fan
+    names = pool.names if prune_info is None \
+        else [pool.names[int(i)] for i in np.asarray(prune_info.keep)]
+    # per-scenario selection; sub-pool indexed when pruned (matches
+    # ``names`` either way)
+    best = np.asarray(out.best)
+    for p, name in enumerate(names):
         print(f"{name:>16s} "
-              f"{float(np.mean(np.asarray(m.avg_wait)[:, p])):9.1f} "
-              f"{float(np.mean(np.asarray(m.max_wait)[:, p])):9.1f} "
-              f"{float(np.mean(np.asarray(m.avg_slowdown)[:, p])):7.2f} "
-              f"{float(np.mean(np.asarray(m.utilization)[:, p])):6.3f} "
-              f"{int(np.asarray(out.deadlocked)[:, p].sum()):5d} "
+              f"{float(np.mean(np.asarray(m.avg_wait).reshape(-1, len(names))[:, p])):9.1f} "
+              f"{float(np.mean(np.asarray(m.max_wait).reshape(-1, len(names))[:, p])):9.1f} "
+              f"{float(np.mean(np.asarray(m.avg_slowdown).reshape(-1, len(names))[:, p])):7.2f} "
+              f"{float(np.mean(np.asarray(m.utilization).reshape(-1, len(names))[:, p])):6.3f} "
+              f"{int(np.asarray(out.deadlocked).reshape(-1, len(names))[:, p].sum()):5d} "
               f"{int((best == p).sum()):4d}/{S}")
+    if fan is not None:
+        # device-computed per-policy uncertainty, scenario-averaged
+        ci = np.asarray(out.cost_ci)
+        wd = np.asarray(out.fan_width)
+        parts = " ".join(
+            f"{n}={np.mean(ci[:, p]):.2f}±w{np.mean(wd[:, p]):.1f}"
+            for p, n in enumerate(names))
+        print(f"fan confidence (mean 95% CI half-width ± member "
+              f"spread): {parts}")
     print(f"objective {goal}: per-scenario winners "
-          f"{[pool.names[int(b)] for b in best]}")
+          f"{[names[int(b)] for b in best]}")
 
 
 def main() -> None:
@@ -133,6 +196,28 @@ def main() -> None:
                          "'lex:avg_wait,makespan', "
                          "'min:avg_wait@util>=0.85'")
     ap.add_argument("--ensemble", type=int, default=1)
+    ap.add_argument("--fan", type=int, default=0, metavar="F",
+                    help="decide over an on-device Monte-Carlo fan of F "
+                         "perturbed futures per policy (DESIGN.md §10); "
+                         "works in twin mode and with --replay-grid")
+    ap.add_argument("--fan-noise", type=float, default=0.3,
+                    help="lognormal runtime-noise sigma for fan members "
+                         "(mean-preserving; member 0 stays exact)")
+    ap.add_argument("--fan-burst", type=float, default=0.0,
+                    help="arrival-burst warp amplitude in [0,1) for fan "
+                         "members (replay mode only — a drain has no "
+                         "future arrivals)")
+    ap.add_argument("--fan-fail", type=float, default=0.0,
+                    help="per-member node-failure probability; a hit "
+                         "member loses a random fraction of the cluster")
+    ap.add_argument("--fan-seed", type=int, default=0,
+                    help="fan PRNG seed (member draws are keyed per "
+                         "(scenario, member) — deterministic, resumable)")
+    ap.add_argument("--prune", action="store_true",
+                    help="goal-conditioned pool pruning for --replay-grid "
+                         "--fan: a cheap low-F pre-pass drops policies "
+                         "the objective provably never selects, then the "
+                         "full fan runs on the survivors")
     ap.add_argument("--failures", type=int, default=0)
     ap.add_argument("--backend",
                     choices=sorted(PASS_BACKENDS) + ["auto"],
@@ -163,6 +248,11 @@ def main() -> None:
         ap.error("--replay-grid evaluates static baselines; --failures "
                  "and --ensemble do not apply (run the co-simulation "
                  "for those)")
+    if args.fan and args.ensemble > 1:
+        ap.error("--fan and --ensemble are mutually exclusive "
+                 "(the fan subsumes the estimate-noise ensemble)")
+    if args.prune and not (args.fan and args.replay_grid):
+        ap.error("--prune applies to --replay-grid --fan")
     from repro.launch.cache import enable_persistent_cache
     enable_persistent_cache(enabled=not args.no_compile_cache)
     engine = DrainEngine(backend=args.backend)
@@ -199,7 +289,7 @@ def main() -> None:
         bus=bus, qrun=em.qrun, total_nodes=args.nodes,
         max_jobs=em.max_jobs, pool=pool, objective=goal,
         free_nodes_probe=lambda: em.free_nodes,
-        ensemble=args.ensemble, engine=engine)
+        ensemble=args.ensemble, fan=make_fan(args), engine=engine)
     report = em.run(on_event=twin.pump, objective=goal)
 
     print(f"jobs={report.n_jobs} events={report.n_events} "
@@ -220,6 +310,16 @@ def main() -> None:
         print(f"  whatif breakdown {name:>10s}: {parts}")
     print("policy mix:", {k: f"{v:.1f}%" for k, v in
                           twin.telemetry.policy_start_distribution().items()})
+    conf = twin.telemetry.confidence_stats()
+    if conf:
+        # device-computed fan uncertainty (decide_fan / decide_ensemble
+        # stamps; DESIGN.md §10) — no host recompute.
+        F = twin.telemetry.cycles[0].fan_size
+        parts = " ".join(
+            f"{n}=±{st['mean_ci']:.2f}(w{st['mean_width']:.1f})"
+            for n, st in sorted(conf.items()))
+        print(f"fan confidence (F={F}, mean 95% CI half-width, "
+              f"member spread): {parts}")
     lat = twin.telemetry.cycle_latency_stats()
     print(f"cycle latency: mean {lat['mean_s'] * 1e3:.1f} ms, "
           f"p50 {lat['p50_s'] * 1e3:.1f} ms over {lat['n']} cycles")

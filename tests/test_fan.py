@@ -1,0 +1,396 @@
+"""On-device Monte-Carlo scenario fans (DESIGN.md §10).
+
+Pins the tentpole invariants of ``core.fan`` + the fan paths of
+``core.engine`` / ``core.whatif``:
+
+- F=1 fans and degenerate specs are BITWISE ``replay_grid`` (both pass
+  backends) — the fan rides the same fork axis, same input assembly;
+- member φ=0 is exact for ANY spec (the fan-less prediction survives);
+- device member metrics are bitwise the host-materialized oracle
+  (``materialize_fan`` + plain ``replay_grid`` over S·F rows);
+- device p50/p95/p99/CVaR/worst/regret reductions match a numpy oracle
+  computed from the member costs;
+- member PRNG keys are prefix-stable (common random numbers): an F=4
+  fan IS the first 4 members of the F=8 fan;
+- the distributional objective grammar parses, round-trips, and
+  rejects malformed/nested forms;
+- dominance pruning NEVER changes the selected policy when the
+  pre-pass fan is the deciding fan (property-tested over random cost
+  tensors and end-to-end over real grids);
+- ``sharded_fan_grid`` (any block size) is bitwise the local fan grid;
+- ``decide_fan`` F=1 is bitwise ``decide``, and fan decisions stamp
+  device-computed CIs into telemetry.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.workload import poisson_trace, stack_scenarios
+from repro.core import whatif
+from repro.core.des import cvar_tail_count, quantile_index
+from repro.core.engine import DrainEngine, member_uncertainty
+from repro.core.fan import (FanSpec, dominance_keep, materialize_fan,
+                            normalize_fan, pruned_fan_grid)
+from repro.core.objective import (Distributional, as_distributional,
+                                  parse_objective, validate_objective)
+from repro.core.policies import parse_pool
+from repro.launch.mesh import make_fleet_mesh
+
+REF = DrainEngine("reference")
+PAL = DrainEngine("pallas", interpret=True)
+
+POOL = parse_pool("fcfs,sjf,saf")
+NOISY = FanSpec(n=8, runtime_noise=0.3, burst_amplitude=0.5,
+                burst_period=600.0, failure_prob=0.3, seed=7)
+
+
+@pytest.fixture(scope="module")
+def scen():
+    traces = [poisson_trace(12, 16, 30.0, (1, 4), (60.0, 600.0), seed=s)
+              for s in range(3)]
+    return stack_scenarios(traces, total_nodes=16)
+
+
+# ----------------------------------------------------------------------
+# degenerate parity: the fan collapses to the PR-6 replay, bitwise
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("eng", [REF, PAL], ids=["reference", "pallas"])
+def test_f1_fan_is_bitwise_replay_grid(scen, eng):
+    base = eng.replay_grid(scen, POOL.spec)
+    fan = eng.fan_grid(scen, POOL.spec, FanSpec(n=1))
+    np.testing.assert_array_equal(np.asarray(base.costs),
+                                  np.asarray(fan.costs))
+    np.testing.assert_array_equal(np.asarray(base.best),
+                                  np.asarray(fan.best))
+    np.testing.assert_array_equal(np.asarray(base.start_t),
+                                  np.asarray(fan.start_t[:, 0]))
+    np.testing.assert_array_equal(np.asarray(base.end_t),
+                                  np.asarray(fan.end_t[:, 0]))
+    for field, a, b in zip(base.metrics._fields, base.metrics,
+                           fan.metrics):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)[:, 0], err_msg=field)
+
+
+def test_f1_noisy_spec_is_still_bitwise(scen):
+    # member 0 is exact for ANY spec, so an F=1 fan of the noisiest
+    # spec is STILL the plain replay
+    spec = dataclasses.replace(NOISY, n=1)
+    base = REF.replay_grid(scen, POOL.spec)
+    fan = REF.fan_grid(scen, POOL.spec, spec)
+    np.testing.assert_array_equal(np.asarray(base.costs),
+                                  np.asarray(fan.costs))
+
+
+def test_degenerate_members_all_equal_base(scen):
+    base = REF.replay_grid(scen, POOL.spec)
+    fan = REF.fan_grid(scen, POOL.spec, FanSpec(n=4))
+    mc = np.asarray(fan.member_costs)
+    for phi in range(4):
+        np.testing.assert_array_equal(mc[:, phi], np.asarray(base.costs))
+
+
+def test_member_zero_exact_under_noise(scen):
+    base = REF.replay_grid(scen, POOL.spec)
+    fan = REF.fan_grid(scen, POOL.spec, NOISY)
+    np.testing.assert_array_equal(np.asarray(fan.member_costs)[:, 0],
+                                  np.asarray(base.costs))
+
+
+# ----------------------------------------------------------------------
+# device fan == host-materialized oracle, bitwise; CRN prefix property
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("eng", [REF, PAL], ids=["reference", "pallas"])
+def test_fan_matches_materialized_oracle_bitwise(scen, eng):
+    fan = eng.fan_grid(scen, POOL.spec, NOISY, "avg_wait")
+    mat = eng.replay_grid(materialize_fan(scen, NOISY), POOL.spec,
+                          "avg_wait")
+    S, F, P = np.asarray(fan.member_costs).shape
+    np.testing.assert_array_equal(
+        np.asarray(mat.costs).reshape(S, F, P),
+        np.asarray(fan.member_costs))
+    np.testing.assert_array_equal(
+        np.asarray(mat.start_t).reshape(S, F, P, -1),
+        np.asarray(fan.start_t))
+
+
+def test_member_keys_are_prefix_stable(scen):
+    # common random numbers: the F=4 fan IS members [:4] of the F=8 fan
+    f8 = REF.fan_grid(scen, POOL.spec, NOISY, "avg_wait")
+    f4 = REF.fan_grid(scen, POOL.spec, dataclasses.replace(NOISY, n=4),
+                      "avg_wait")
+    np.testing.assert_array_equal(np.asarray(f4.member_costs),
+                                  np.asarray(f8.member_costs)[:, :4])
+
+
+# ----------------------------------------------------------------------
+# distributional reductions vs a numpy oracle
+# ----------------------------------------------------------------------
+
+def _np_reduce(obj, member):
+    """Numpy oracle for Distributional.reduce_fan over (S, F, P)."""
+    F = member.shape[1]
+    if obj.reduction == "mean":
+        return member.mean(axis=1)
+    if obj.reduction == "worst":
+        return member.max(axis=1)
+    if obj.reduction == "regret":
+        with np.errstate(invalid="ignore"):
+            best = member.min(axis=2, keepdims=True)
+            reg = np.where(np.isfinite(member), member - best, np.inf)
+        return reg.max(axis=1)
+    srt = np.sort(member, axis=1)
+    if obj.reduction == "quantile":
+        return srt[:, quantile_index(obj.level / 100.0, F)]
+    m = cvar_tail_count(obj.level, F)
+    return srt[:, F - m:].mean(axis=1)
+
+
+@pytest.mark.parametrize("goal", [
+    "p50:avg_wait", "p95:avg_wait", "p99:avg_wait", "cvar:0.9:avg_wait",
+    "cvar:0.5:score", "worst:avg_slowdown", "regret:avg_wait",
+    "mean:avg_wait"])
+def test_device_reduction_matches_numpy_oracle(scen, goal):
+    obj = parse_objective(goal)
+    out = REF.fan_grid(scen, POOL.spec, NOISY, obj)
+    member = np.asarray(out.member_costs)
+    oracle = _np_reduce(obj, member)
+    np.testing.assert_allclose(np.asarray(out.costs), oracle,
+                               rtol=1e-6, atol=0)
+    assert np.array_equal(np.asarray(out.best),
+                          np.argmin(oracle, axis=1))
+
+
+def test_member_uncertainty_oracle():
+    rng = np.random.default_rng(0)
+    member = rng.normal(100.0, 10.0, size=(4, 16, 3)).astype(np.float32)
+    member[2, 5, 1] = np.inf       # a deadlocked member poisons its cell
+    ci, width = jax.jit(member_uncertainty)(jnp.asarray(member))
+    ci, width = np.asarray(ci), np.asarray(width)
+    with np.errstate(invalid="ignore"):
+        exp_ci = 1.96 * member.std(axis=1) / np.sqrt(16)
+        exp_w = member.max(axis=1) - member.min(axis=1)
+    fin = np.isfinite(member).all(axis=1)
+    np.testing.assert_allclose(ci[fin], exp_ci[fin], rtol=1e-5)
+    np.testing.assert_allclose(width[fin], exp_w[fin], rtol=1e-5)
+    assert np.isinf(ci[~fin]).all() and np.isinf(width[~fin]).all()
+
+
+# ----------------------------------------------------------------------
+# grammar
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    "p95:avg_wait", "p99.9:avg_wait", "cvar:0.9:avg_wait", "worst:score",
+    "regret:avg_wait", "mean:score", "p50:0.5*avg_wait+0.5*makespan",
+    "cvar:0.95:min:avg_wait@util>=0.5", "worst:lex:avg_wait,makespan"])
+def test_grammar_round_trip(spec):
+    obj = validate_objective(spec)      # parse -> spec -> parse == obj
+    assert isinstance(obj, Distributional)
+
+
+@pytest.mark.parametrize("bad", [
+    "p95:p99:avg_wait", "mean:worst:score", "cvar:0.9:cvar:0.5:x",
+    "cvar:1.5:score", "cvar:-0.1:score", "p0:score", "p101:score",
+    "cvar:score", "p95:", "worst:"])
+def test_grammar_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_objective(bad)
+
+
+def test_plain_goal_lifts_to_mean():
+    obj = as_distributional("avg_wait")
+    assert obj.reduction == "mean"
+    assert obj.inner == parse_objective("avg_wait")
+    # idempotent on an already-distributional goal
+    assert as_distributional(obj) is obj
+
+
+def test_fanspec_validation():
+    with pytest.raises(ValueError):
+        FanSpec(n=0)
+    with pytest.raises(ValueError):
+        FanSpec(n=2, burst_amplitude=1.0)
+    with pytest.raises(ValueError):
+        FanSpec(n=2, failure_prob=1.5)
+    with pytest.raises(ValueError):
+        FanSpec(n=2, runtime_noise=-0.1)
+    assert normalize_fan(4) == FanSpec(n=4)
+    assert normalize_fan(NOISY) is NOISY
+    assert FanSpec(n=3).degenerate and not NOISY.degenerate
+
+
+# ----------------------------------------------------------------------
+# pruning: dominance NEVER changes the winner (pre_n == F theorem)
+# ----------------------------------------------------------------------
+
+def _winner_invariance(member, obj):
+    """Assert argmin(reduce(member)) is unchanged by dominance_keep."""
+    full = _np_reduce(obj, member)
+    best_full = np.argmin(full, axis=1)
+    keep = dominance_keep(member, pointwise=(obj.reduction == "regret"))
+    keep_idx = np.nonzero(keep)[0]
+    assert keep[best_full].all(), "winner was pruned"
+    sub = _np_reduce(obj, member[:, :, keep_idx])
+    np.testing.assert_array_equal(keep_idx[np.argmin(sub, axis=1)],
+                                  best_full)
+
+
+_PRUNE_GOALS = ("mean:avg_wait", "worst:avg_wait", "p50:avg_wait",
+                "p95:avg_wait", "cvar:0.7:avg_wait", "regret:avg_wait")
+
+
+@pytest.mark.parametrize("goal", _PRUNE_GOALS)
+def test_prune_winner_invariance_random_tensors(goal):
+    # seeded fuzz over random member-cost tensors, with ties and infs
+    obj = parse_objective(goal)
+    rng = np.random.default_rng(42)
+    for trial in range(200):
+        S = int(rng.integers(1, 4))
+        F = int(rng.integers(1, 9))
+        P = int(rng.integers(1, 7))
+        member = rng.normal(0.0, 1.0, size=(S, F, P))
+        member = np.round(member, 1)             # force ties
+        if trial % 3 == 0:                       # sprinkle deadlocks
+            mask = rng.random(size=member.shape) < 0.1
+            member = np.where(mask, np.inf, member)
+        _winner_invariance(member, obj)
+
+
+@pytest.mark.parametrize("goal", _PRUNE_GOALS)
+def test_prune_winner_invariance_hypothesis(goal):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra.numpy import arrays
+
+    obj = parse_objective(goal)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def run(data):
+        S = data.draw(st.integers(1, 3))
+        F = data.draw(st.integers(1, 6))
+        P = data.draw(st.integers(1, 5))
+        member = data.draw(arrays(
+            np.float64, (S, F, P),
+            elements=st.one_of(
+                st.integers(-5, 5).map(float),
+                st.just(np.inf))))
+        _winner_invariance(member, obj)
+
+    run()
+
+
+@pytest.mark.parametrize("goal", ["p95:avg_wait", "cvar:0.9:score",
+                                  "regret:avg_wait"])
+def test_pruned_fan_grid_end_to_end(scen, goal):
+    # pre_n == n: selection provably identical to the unpruned grid
+    full = REF.fan_grid(scen, POOL.spec, NOISY, goal)
+    out, info = pruned_fan_grid(scen, POOL.spec, NOISY, goal,
+                                engine=REF, pre_n=NOISY.n)
+    np.testing.assert_array_equal(info.best, np.asarray(full.best))
+    # the kept columns of the full grid are the pruned grid, bitwise
+    np.testing.assert_array_equal(
+        np.asarray(out.member_costs),
+        np.asarray(full.member_costs)[:, :, info.keep])
+    assert 0.0 <= info.rate < 1.0
+    assert info.pre_members.shape == np.asarray(full.member_costs).shape
+
+
+# ----------------------------------------------------------------------
+# fleet: sharded/streamed fan == local fan, bitwise
+# ----------------------------------------------------------------------
+
+def test_sharded_fan_grid_matches_local(scen):
+    local = REF.fan_grid(scen, POOL.spec, NOISY, "p95:avg_wait")
+    mesh = make_fleet_mesh(1)
+    for block in (None, 6, 8):
+        got = whatif.sharded_fan_grid(
+            mesh, engine=REF, objective="p95:avg_wait", fan=NOISY,
+            block_size=block)(scen, POOL)
+        np.testing.assert_array_equal(np.asarray(local.member_costs),
+                                      np.asarray(got.member_costs),
+                                      err_msg=f"block={block}")
+        np.testing.assert_array_equal(np.asarray(local.costs),
+                                      np.asarray(got.costs))
+        np.testing.assert_array_equal(np.asarray(local.best),
+                                      np.asarray(got.best))
+        np.testing.assert_array_equal(np.asarray(local.cost_ci),
+                                      np.asarray(got.cost_ci))
+
+
+# ----------------------------------------------------------------------
+# decide_fan: the twin's per-cycle fan decision
+# ----------------------------------------------------------------------
+
+def test_decide_fan_f1_is_bitwise_decide():
+    from conftest import make_cluster_state
+    pool = jnp.asarray([0, 1, 2], jnp.int32)
+    for seed in range(4):
+        state = make_cluster_state(max_jobs=48, total_nodes=32,
+                                   seed=seed, n_queued=6, n_running=2,
+                                   now=100.0 + 40.0 * seed)
+        d0 = REF.decide(state, pool)
+        d1 = REF.decide_fan(state, pool, FanSpec(n=1))
+        assert int(d0.policy_index) == int(d1.policy_index)
+        np.testing.assert_array_equal(np.asarray(d0.costs),
+                                      np.asarray(d1.costs))
+        np.testing.assert_array_equal(np.asarray(d0.run_mask),
+                                      np.asarray(d1.run_mask))
+        # degenerate F>1 fans also collapse to the plain decision
+        d4 = REF.decide_fan(state, pool, 4)
+        np.testing.assert_array_equal(np.asarray(d0.costs),
+                                      np.asarray(d4.costs))
+
+
+def test_decide_fan_stamps_uncertainty():
+    from conftest import make_cluster_state
+    pool = jnp.asarray([0, 1, 2], jnp.int32)
+    state = make_cluster_state(max_jobs=48, total_nodes=32, seed=3,
+                               n_queued=8, n_running=2, now=500.0)
+    d = REF.decide_fan(state, pool, FanSpec(n=8, runtime_noise=0.3),
+                       "p95:avg_wait")
+    assert d.fan_size == 8
+    assert d.cost_ci is not None and d.fan_width is not None
+    ci, width = np.asarray(d.cost_ci), np.asarray(d.fan_width)
+    assert ci.shape == width.shape == (3,)
+    assert (ci[np.isfinite(ci)] >= 0).all()
+    assert (width[np.isfinite(width)] >= 0).all()
+    # plain decisions don't fan
+    d0 = REF.decide(state, pool)
+    assert d0.fan_size == 1 and d0.cost_ci is None
+
+
+def test_twin_records_fan_confidence():
+    from repro.cluster.emulator import ClusterEmulator
+    from repro.core.events import EventBus
+    from repro.core.twin import SchedTwin
+    trace = poisson_trace(10, 16, 20.0, (1, 4), (30.0, 300.0), seed=1)
+    bus = EventBus()
+    em = ClusterEmulator(trace, 16, bus=bus)
+    twin = SchedTwin(bus=bus, qrun=em.qrun, total_nodes=16,
+                     max_jobs=em.max_jobs,
+                     fan=FanSpec(n=4, runtime_noise=0.3),
+                     objective="p95:avg_wait",
+                     free_nodes_probe=lambda: em.free_nodes)
+    em.run(on_event=twin.pump)
+    assert twin.telemetry.cycles, "no decision cycles ran"
+    rec = twin.telemetry.cycles[0]
+    assert rec.fan_size == 4 and rec.cost_ci and rec.fan_width
+    stats = twin.telemetry.confidence_stats()
+    assert stats and all(st["n"] + st["n_inf"] > 0
+                         for st in stats.values())
+
+
+def test_twin_rejects_fan_plus_ensemble():
+    from repro.core.events import EventBus
+    from repro.core.twin import SchedTwin
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        SchedTwin(bus=EventBus(), qrun=lambda j, t: None, total_nodes=8,
+                  fan=FanSpec(n=4), ensemble=4)
