@@ -78,6 +78,25 @@ print("risk-averse picks (S=4, F=64 futures):",
       [pool7.names[int(b)] for b in fan.best])
 print("p0 CI half-widths:", np.round(np.asarray(fan.cost_ci)[0], 1))
 
+# --- adaptive fan racing: pay only for open decisions ----------------
+# A fixed fan spends S*F*P members even when the winner is obvious.
+# Racing (DESIGN.md §11) starts every policy at f0 members, eliminates
+# policies whose CI lower bound clears the incumbent's upper bound,
+# and doubles survivors' fans up to F_max — CRN prefix-stability means
+# each rung replays ONLY the new member suffix (no member is ever
+# replayed twice).  Same winners as the full fan; a fraction of the
+# replays.  budget_ms/max_members make it anytime.
+# CLI: twin_loop --fan 64 --race --race-f0 4 [--budget-ms 500]
+from repro.core.race import RaceSpec, race_grid
+
+race = race_grid(scenarios, pool7.spec,
+                 RaceSpec(fan=FanSpec(n=64, runtime_noise=0.3,
+                                      failure_prob=0.1), f0=4),
+                 "cvar:0.9:avg_wait")
+print(f"raced picks ({race.members} of {race.members_full} members, "
+      f"{len(race.rungs)} rungs, stopped={race.stopped}):",
+      [pool7.names[int(b)] for b in race.best])
+
 # --- the twin: simulation-in-the-loop adaptive scheduling ------------
 # ``pool`` takes the sweep grammar (DESIGN.md §5): one what-if fork per
 # term/grid point, all drained in ONE batched engine call.  "paper" is

@@ -26,9 +26,13 @@ from repro.core.objective import (DEFAULT_OBJECTIVE, Constrained,
                                   registered_objectives, report_costs,
                                   resolve_goal, validate_objective)
 from repro.core.engine import (DEFAULT_ENGINE, PASS_BACKENDS, DrainEngine,
-                               ReplayOutcome, register_backend)
+                               FanOutcome, ReplayOutcome, register_backend)
+from repro.core.fan import FanSpec, normalize_fan, pruned_fan_grid
+from repro.core.race import (RaceOutcome, RaceSpec, decide_race,
+                             normalize_race, race_grid)
 from repro.core.whatif import (Decision, decide, decide_ensemble,
                                decide_legacy_vmap, pool_array,
+                               sharded_fan_grid, sharded_race_grid,
                                sharded_replay_grid, sharded_whatif)
 from repro.core.twin import SchedTwin
 
@@ -55,8 +59,12 @@ __all__ = [
     "resolve_goal", "register_objective", "registered_objectives",
     "metrics_from_rows", "report_costs",
     "DrainEngine", "DEFAULT_ENGINE", "PASS_BACKENDS", "register_backend",
-    "ReplayOutcome",
+    "ReplayOutcome", "FanOutcome",
+    "FanSpec", "normalize_fan", "pruned_fan_grid",
+    "RaceSpec", "RaceOutcome", "normalize_race", "race_grid",
+    "decide_race",
     "Decision", "decide", "decide_ensemble", "decide_legacy_vmap",
     "pool_array", "sharded_whatif", "sharded_replay_grid",
+    "sharded_fan_grid", "sharded_race_grid",
     "SchedTwin",
 ]

@@ -59,7 +59,8 @@ from repro.core import scoring
 from repro.core.backfill import (priority_order,
                                  schedule_pass_with_order,
                                  static_priority_order)
-from repro.core.fan import FanSpec, normalize_fan, perturb_block
+from repro.core.fan import (FanSpec, normalize_fan, perturb_block,
+                            perturb_window)
 from repro.core.objective import (DEFAULT_OBJECTIVE, Objective,
                                   ObjectiveLike, as_distributional,
                                   resolve_goal)
@@ -188,7 +189,9 @@ class FanOutcome(NamedTuple):
     metrics: DrainMetrics     # (S, F, P)-leading
     deadlocked: jax.Array     # bool (S, F, P)
     events: jax.Array         # i32 (S, F, P)
-    result: ReplayResult      # the raw flat (k = S·F·P) replay result
+    result: Optional[ReplayResult]  # raw flat (k = S·F·P) replay result;
+                              # None when the outcome was ASSEMBLED from
+                              # donated pieces (pruned/raced grids)
     member_costs: jax.Array   # (S, F, P) inner costs per member
     costs: jax.Array          # (S, P) reduced distributional costs
     best: jax.Array           # (S,) per-scenario winning pool index
@@ -607,6 +610,75 @@ class DrainEngine:
             fan_width=width,
         )
 
+    def fan_window_grid(self, scenarios, pool, fan,
+                        objective: ObjectiveLike = None, *,
+                        lo: int = 0, width: Optional[int] = None,
+                        weights: Optional[scoring.ScoreWeights] = None
+                        ) -> FanOutcome:
+        """Replay ONLY members ``φ ∈ [lo, lo+width)`` of the fan — the
+        racing/donation suffix.  CRN prefix-stability (``fan.
+        perturb_rows`` keys on (s, φ) alone) makes every returned
+        member bitwise the corresponding member of the full
+        ``fan_grid``, so windows replayed at different times
+        concatenate into the full fan without ever re-replaying a
+        (scenario, policy, member) triple.  The outcome's fan axis has
+        ``width`` members and its reduction/selection treats the
+        window as the whole fan — racing callers re-reduce over the
+        accumulated members instead (``race.rung_stats``)."""
+        goal = resolve_goal(objective, weights)
+        spec = normalize_fan(fan)
+        if width is None:
+            width = spec.n - lo
+        if not (0 <= lo and lo + width <= spec.n and width >= 1):
+            raise ValueError(
+                f"member window [{lo}, {lo + width}) outside fan of "
+                f"size {spec.n}")
+        pool = as_pool(pool)
+        S = int(scenarios.total_nodes.shape[0])
+        P = pool_size(pool)
+        plan = self.plan(pool)              # fork f = (s·width + w)·P + p
+        res, metrics, member, costs, best, ci, cwidth = _fan_window_replay(
+            self, *_scenario_arrays(scenarios), pool,
+            plan * (S * width) if plan is not None else None,
+            goal, P, S, spec, lo, width)
+        shape = (S, width, P)
+        rs = lambda x: x.reshape(shape + x.shape[1:])
+        return FanOutcome(
+            start_t=rs(res.state.jobs.start_t),
+            end_t=rs(res.state.jobs.end_t),
+            metrics=jax.tree.map(rs, metrics),
+            deadlocked=rs(res.deadlocked),
+            events=rs(res.events),
+            result=res,
+            member_costs=member,
+            costs=costs,
+            best=best,
+            cost_ci=ci,
+            fan_width=cwidth,
+        )
+
+    # -- adaptive racing (DESIGN.md §11) -------------------------------
+    def race_grid(self, scenarios, pool, race,
+                  objective: ObjectiveLike = None):
+        """Successive-halving fan evaluation: start every policy at a
+        low rung F₀, eliminate CI-dominated policies between rungs,
+        replay only the new member suffix for survivors
+        (``core/race.py``).  ``race`` is a ``RaceSpec``, a ``FanSpec``
+        (raced to ``spec.n`` with default rungs), or a bare int F.
+        Returns a ``race.RaceOutcome``."""
+        from repro.core.race import race_grid as _race_grid
+        return _race_grid(scenarios, pool, race, objective, engine=self)
+
+    def decide_race(self, state: SimState, pool: EnginePool, race,
+                    objective: ObjectiveLike = None):
+        """One raced decision cycle: the ``decide_fan`` fan grown rung
+        by rung with CI elimination and anytime budgets.  Returns
+        ``(Decision, race.RaceOutcome)`` — the decision's ``fan_size``
+        is the members the winner actually ran, the outcome carries
+        the rung accounting (see ``core.race.decide_race``)."""
+        from repro.core.race import decide_race as _decide_race
+        return _decide_race(state, pool, race, objective, engine=self)
+
 
 # ----------------------------------------------------------------------
 # Jitted implementations (engine static -> cached per configuration).
@@ -1003,6 +1075,92 @@ def _fan_replay(engine: DrainEngine, submit, nodes, est, true_rt, valid,
     member, costs, best, ci, width = fan_select(
         objective, metrics, res.deadlocked, spec.n, P)
     return res, metrics, member, costs, best, ci, width
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("engine", "plan", "objective", "P",
+                                    "S", "spec", "lo", "width"))
+def _fan_window_replay(engine: DrainEngine, submit, nodes, est, true_rt,
+                       valid, totals, pool: EnginePool,
+                       plan: HoistPlan = None,
+                       objective: Objective = DEFAULT_OBJECTIVE,
+                       P: int = 1, S: int = 1, spec: FanSpec = FanSpec(),
+                       lo: int = 0, width: int = 1):
+    """``_fan_replay`` restricted to members ``φ ∈ [lo, lo+width)`` —
+    the racing-rung suffix.  Row ``r = s·width + w`` is member
+    ``lo + w`` of scenario s (fork ``f = r·P + p``); the per-member
+    draws key on (seed, s, φ) alone, so each row is bitwise the
+    ``s·F + φ`` row of the full fan.  ``lo``/``width`` are static —
+    the rung schedule is fixed, so each rung shape compiles once."""
+    r = jnp.arange(S * width)
+    rows = perturb_window(submit, nodes, est, true_rt, valid, totals,
+                          spec, r, lo, width, S)
+    states, arrival_t, true_rep, pool_t, valid_rep = \
+        _assemble_replay_inputs(*rows, pool, P)
+    res, metrics = _replay_impl(engine, states, arrival_t, true_rep,
+                                pool_t, valid_rep, plan)
+    member, costs, best, ci, cwidth = fan_select(
+        objective, metrics, res.deadlocked, width, P)
+    return res, metrics, member, costs, best, ci, cwidth
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("engine", "spec", "objective", "plan",
+                                    "lo", "width"))
+def _decide_fan_window(engine: DrainEngine, state: SimState,
+                       pool: EnginePool, spec: FanSpec = FanSpec(),
+                       objective: Objective = DEFAULT_OBJECTIVE,
+                       plan: HoistPlan = None, lo: int = 0,
+                       width: int = 1):
+    """``_decide_fan`` restricted to members ``φ ∈ [lo, lo+width)`` —
+    the drain-side racing rung (fork ``f = w·k + p``, member
+    ``φ = lo + w``).  Same (seed, φ) draw chains as ``_decide_fan``,
+    so window members are bitwise the full fan's members and rungs
+    concatenate without replaying a member twice.  Returns per-member
+    pieces (costs, deadlocks, metrics, member-0 first-started) for the
+    host-side race controller to accumulate — selection over the
+    concatenated members happens in ``race.rung_stats``."""
+    from repro.core.fan import _member_draws
+    k = pool_size(pool)
+    cap = state.jobs.capacity
+    dist = as_distributional(objective)
+    phi = lo + jnp.arange(width)
+
+    states = broadcast_state(state, width * k)
+    if not spec.degenerate:
+        eps, _, u = jax.vmap(
+            lambda p: _member_draws(spec.seed, jnp.int32(0), p, cap))(phi)
+        exact = phi == 0
+        if spec.runtime_noise > 0.0:
+            sig = spec.runtime_noise
+            scale = jnp.exp(sig * eps - 0.5 * sig * sig)     # (W, J)
+            est = state.jobs.est_runtime[None, :]
+            est_m = jnp.where(exact[:, None], est, est * scale)
+            states = states._replace(jobs=states.jobs._replace(
+                est_runtime=jnp.repeat(est_m, k, axis=0)))
+        if spec.failure_prob > 0.0:
+            hit = (u[:, 0] < spec.failure_prob) & ~exact
+            frac = u[:, 1] * spec.failure_frac
+            tot = states.total_nodes                          # (W·k,)
+            down = jnp.floor(
+                state.total_nodes.astype(jnp.float32) * frac)
+            down = jnp.where(hit, down.astype(tot.dtype), 0)
+            down_b = jnp.repeat(down, k)
+            states = states._replace(
+                free_nodes=jnp.maximum(states.free_nodes - down_b, 0),
+                total_nodes=jnp.maximum(tot - down_b, 1))
+
+    pool_b = tile_pool(pool, width)
+    plan_b = plan * width if plan is not None else None
+    eval_mask = state.jobs.state == QUEUED
+    res = _drain_impl(engine, states, pool_b, plan_b)
+    metrics = jax.vmap(drain_metrics, in_axes=(0, None))(res, eval_mask)
+    member_metrics = jax.tree.map(lambda x: x.reshape(width, k), metrics)
+    member_dead = res.deadlocked.reshape(width, k)
+    member_costs = jnp.where(member_dead, jnp.inf,
+                             dist.member_costs(member_metrics))
+    first0 = res.first_started.reshape(width, k, cap)[0]
+    return member_costs, member_dead, member_metrics, first0
 
 
 def _shape_outcome(res: ReplayResult, metrics: DrainMetrics, shape,

@@ -73,8 +73,9 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
-    "FanSpec", "PruneInfo", "perturb_block", "materialize_fan",
-    "dominance_keep", "pruned_fan_grid", "normalize_fan",
+    "FanSpec", "PruneInfo", "perturb_block", "perturb_rows",
+    "perturb_window", "materialize_fan", "dominance_keep",
+    "pruned_fan_grid", "normalize_fan", "fit_runtime_sigma",
 ]
 
 
@@ -119,6 +120,27 @@ class FanSpec:
         return (self.runtime_noise == 0.0 and self.burst_amplitude == 0.0
                 and self.failure_prob == 0.0)
 
+    @classmethod
+    def from_history(cls, telemetry, n: int = 64, *,
+                     min_samples: int = 8, fallback: float = 0.3,
+                     **kwargs) -> "FanSpec":
+        """Fit ``runtime_noise`` to the twin's OWN observed §3.2
+        estimate-vs-true residuals instead of an administrator guess.
+
+        ``telemetry`` is a ``Telemetry`` (its ``runtime_residuals``
+        list, recorded by the twin at every JOBOBIT as ``(estimated,
+        actual)`` runtime pairs) or any iterable of such pairs.  The
+        lognormal model is exactly the fan's perturbation model
+        (``actual = est · exp(σ·ε − σ²/2)`` mean-preserving), so the
+        MLE is the sample std of ``log(actual/est)``; until
+        ``min_samples`` completions are observed the ``fallback`` σ is
+        used.  Host-side fitting only — the returned spec enters the
+        device path like any other ``FanSpec``."""
+        res = getattr(telemetry, "runtime_residuals", telemetry)
+        sigma = fit_runtime_sigma(res, min_samples=min_samples,
+                                  fallback=fallback)
+        return cls(n=n, runtime_noise=sigma, **kwargs)
+
 
 def normalize_fan(fan) -> FanSpec:
     """Accept a ``FanSpec`` or a bare int F (a degenerate F-member fan
@@ -126,6 +148,21 @@ def normalize_fan(fan) -> FanSpec:
     if isinstance(fan, FanSpec):
         return fan
     return FanSpec(n=int(fan))
+
+
+def fit_runtime_sigma(residuals, *, min_samples: int = 8,
+                      fallback: float = 0.3) -> float:
+    """σ̂ = sample std (ddof=1) of ``log(actual/est)`` over the finite
+    positive ``(est, actual)`` pairs; ``fallback`` below ``min_samples``
+    usable pairs.  Pure host arithmetic."""
+    logs = []
+    for est, actual in residuals:
+        e, a = float(est), float(actual)
+        if e > 0.0 and a > 0.0 and np.isfinite(e) and np.isfinite(a):
+            logs.append(np.log(a / e))
+    if len(logs) < max(min_samples, 2):
+        return float(fallback)
+    return float(np.std(np.asarray(logs), ddof=1))
 
 
 # ----------------------------------------------------------------------
@@ -146,23 +183,16 @@ def _member_draws(seed: int, s: jax.Array, phi: jax.Array, J: int):
     return eps, phase, u
 
 
-def perturb_block(submit, nodes, est, true_rt, valid, totals,
-                  spec: FanSpec, g: jax.Array, S: int):
-    """Expand base (S, J) scenario arrays into a block of perturbed
-    pseudo-scenarios — pure device code, called INSIDE the fan jits.
-
-    ``g`` is the (G,) pseudo-scenario id vector (``g = s·F + φ``); ids
-    past ``S·F`` become INERT rows (valid all-False, ``total_nodes=1``,
-    the ``pad_scenarios`` convention) so the fleet streamer can pad its
-    last block.  Member φ=0 selects the unperturbed base bitwise
-    (``jnp.where``, not arithmetic), and each model is gated on a
-    static Python ``if`` — a degenerate spec compiles to the plain
-    gather, which is how F=1 parity with ``replay_grid`` is bit-exact.
-    """
-    F = spec.n
-    inert = g >= S * F
-    gc = jnp.minimum(g, S * F - 1)
-    s, phi = gc // F, gc % F
+def perturb_rows(submit, nodes, est, true_rt, valid, totals,
+                 spec: FanSpec, s: jax.Array, phi: jax.Array,
+                 inert: jax.Array):
+    """Perturb explicit (scenario, member) row vectors — the shared
+    core of ``perturb_block`` (contiguous fans, ``φ = g mod F``) and
+    ``perturb_window`` (member windows ``φ ∈ [lo, hi)``, the racing
+    suffix replays).  Perturbations depend ONLY on ``(spec.seed, s,
+    φ)`` — never on how the rows were batched — which is the CRN
+    prefix-stability contract the donation/racing paths rely on: a row
+    built here is bitwise the same row of the full fan."""
     sub = submit[s]
     nod = nodes[s]
     es = est[s]
@@ -200,6 +230,42 @@ def perturb_block(submit, nodes, est, true_rt, valid, totals,
     val = val & ~inert[:, None]
     tot = jnp.where(inert, jnp.ones_like(tot), tot)
     return sub, nod, es, tr, val, tot
+
+
+def perturb_block(submit, nodes, est, true_rt, valid, totals,
+                  spec: FanSpec, g: jax.Array, S: int):
+    """Expand base (S, J) scenario arrays into a block of perturbed
+    pseudo-scenarios — pure device code, called INSIDE the fan jits.
+
+    ``g`` is the (G,) pseudo-scenario id vector (``g = s·F + φ``); ids
+    past ``S·F`` become INERT rows (valid all-False, ``total_nodes=1``,
+    the ``pad_scenarios`` convention) so the fleet streamer can pad its
+    last block.  Member φ=0 selects the unperturbed base bitwise
+    (``jnp.where``, not arithmetic), and each model is gated on a
+    static Python ``if`` — a degenerate spec compiles to the plain
+    gather, which is how F=1 parity with ``replay_grid`` is bit-exact.
+    """
+    F = spec.n
+    inert = g >= S * F
+    gc = jnp.minimum(g, S * F - 1)
+    s, phi = gc // F, gc % F
+    return perturb_rows(submit, nodes, est, true_rt, valid, totals,
+                        spec, s, phi, inert)
+
+
+def perturb_window(submit, nodes, est, true_rt, valid, totals,
+                   spec: FanSpec, r: jax.Array, lo, width: int, S: int):
+    """Expand ONLY members ``φ ∈ [lo, lo+width)`` of each scenario —
+    the racing suffix: row ``r = s·width + w`` is member ``φ = lo + w``
+    of scenario s, bitwise the row ``s·F + φ`` of the full fan
+    (``perturb_rows`` keys on (s, φ) alone).  ``lo`` may be a traced
+    scalar so fleet blocks at different offsets share one compile; ids
+    past ``S·width`` are inert padding rows as in ``perturb_block``."""
+    inert = r >= S * width
+    rc = jnp.minimum(r, S * width - 1)
+    s, w = rc // width, rc % width
+    return perturb_rows(submit, nodes, est, true_rt, valid, totals,
+                        spec, s, lo + w, inert)
 
 
 # ----------------------------------------------------------------------
@@ -250,6 +316,8 @@ class PruneInfo(NamedTuple):
     best: np.ndarray        # (S,) winners as FULL-pool indices
     rate: float             # fraction of the pool pruned
     pre_members: np.ndarray  # (S, pre_n, P) pre-pass member costs
+    members: int = 0        # (s, φ, p) triples actually replayed
+    members_full: int = 0   # triples an unpruned full fan replays
 
 
 def dominance_keep(member_costs: np.ndarray,
@@ -283,16 +351,29 @@ def dominance_keep(member_costs: np.ndarray,
 def pruned_fan_grid(scenarios, pool, fan, objective=None, *,
                     engine=None, pre_n: int = 16):
     """Two-pass fan evaluation: a cheap ``pre_n``-member pre-pass, the
-    dominance prune, then the full-F grid over the kept sub-pool.
+    dominance prune, then ONLY the remaining member suffix
+    ``φ ∈ [pre_n, F)`` over the kept sub-pool.
+
+    The pre-pass members are DONATED into the deciding fan via CRN
+    prefix-stability — member φ of the pre-pass is bitwise member φ of
+    the full fan (``perturb_rows`` keys on (s, φ) alone), so the
+    donated prefix concatenates with the ``fan_window_grid`` suffix
+    into exactly the full fan's member grid without replaying any
+    (scenario, policy, member) triple twice.  ``info.members`` vs
+    ``info.members_full`` accounts for the saving: the old double-pay
+    was ``S·(pre_n·P + F·P_kept)``; donation makes it
+    ``S·(pre_n·P + (F − pre_n)·P_kept)`` — with ``pre_n == F`` the
+    second pass vanishes entirely.
 
     Returns ``(outcome, info)`` — ``outcome`` is the full-F
     ``engine.FanOutcome`` over the KEPT pool (its ``costs``/``metrics``
-    have ``len(info.keep)`` policy columns); ``info.best`` maps the
-    per-scenario winners back to FULL-pool indices.  Prefix-stability
-    of the member PRNG keys means the pre-pass members are exactly the
-    first ``pre_n`` members of the deciding fan (common random
-    numbers); with ``pre_n == fan.n`` the winner is provably identical
-    to the unpruned grid."""
+    have ``len(info.keep)`` policy columns; its ``result`` is None —
+    the outcome is assembled from donated pieces, not one flat
+    replay); ``info.best`` maps the per-scenario winners back to
+    FULL-pool indices.  Selection is bitwise identical to the
+    pre-donation double-replay (tests/test_fan.py asserts member
+    parity against the unpruned grid); with ``pre_n == fan.n`` the
+    winner is provably identical to the unpruned grid."""
     from repro.core import engine as _eng
     from repro.core.objective import as_distributional, resolve_goal
     eng = engine if engine is not None else _eng.DEFAULT_ENGINE
@@ -306,13 +387,45 @@ def pruned_fan_grid(scenarios, pool, fan, objective=None, *,
     keep = dominance_keep(pre_members, pointwise=pointwise)
     keep_idx = np.nonzero(keep)[0]
     P = keep.shape[0]
-    sub_pool = (pool if len(keep_idx) == P
+    Pk = len(keep_idx)
+    S = int(scenarios.total_nodes.shape[0])
+    sub_pool = (pool if Pk == P
                 else _eng._index_pool(pool, jnp.asarray(keep_idx)))
-    out = eng.fan_grid(scenarios, sub_pool, spec, goal)
+    kp = jnp.asarray(keep_idx)
+    take = lambda x: x[:, :, kp]
+    if pre.n == spec.n:
+        metrics_k = jax.tree.map(take, pre_out.metrics)
+        dead_k = take(pre_out.deadlocked)
+        start_k = take(pre_out.start_t)
+        end_k = take(pre_out.end_t)
+        events_k = take(pre_out.events)
+    else:
+        suf = eng.fan_window_grid(scenarios, sub_pool, spec, goal,
+                                  lo=pre.n, width=spec.n - pre.n)
+        cat = lambda a, b: jnp.concatenate([take(a), b], axis=1)
+        metrics_k = jax.tree.map(cat, pre_out.metrics, suf.metrics)
+        dead_k = cat(pre_out.deadlocked, suf.deadlocked)
+        start_k = cat(pre_out.start_t, suf.start_t)
+        end_k = cat(pre_out.end_t, suf.end_t)
+        events_k = cat(pre_out.events, suf.events)
+    # Re-select over the concatenated (S, F, Pk) members in the SAME
+    # jitted selection the sharded streamer uses (bitwise contract:
+    # fan_select_jit on concatenated metrics == in-jit fan_select).
+    flat = jax.tree.map(
+        lambda x: x.reshape((S * spec.n * Pk,) + x.shape[3:]), metrics_k)
+    member, costs, best, ci, width = _eng.fan_select_jit(
+        goal, flat, dead_k.reshape(-1), spec.n, Pk)
+    out = _eng.FanOutcome(
+        start_t=start_k, end_t=end_k, metrics=metrics_k,
+        deadlocked=dead_k, events=events_k, result=None,
+        member_costs=member, costs=costs, best=best,
+        cost_ci=ci, fan_width=width)
     info = PruneInfo(
         keep=keep_idx,
         best=keep_idx[np.asarray(out.best)],
-        rate=1.0 - len(keep_idx) / P,
+        rate=1.0 - Pk / P,
         pre_members=pre_members,
+        members=S * (pre.n * P + (spec.n - pre.n) * Pk),
+        members_full=S * spec.n * P,
     )
     return out, info

@@ -29,6 +29,17 @@ class CycleRecord:
     cost_ci: Dict[str, float] = dataclasses.field(default_factory=dict)
     fan_width: Dict[str, float] = dataclasses.field(default_factory=dict)
     fan_size: int = 1
+    # racing accounting (DESIGN.md §11), stamped by SchedTwin(race=...):
+    # rungs the race executed, (s, φ, p) member triples actually
+    # replayed (vs fan_size·k for a fixed fan), the achieved winner
+    # separation (rival CI lower bound − winner upper bound; > 0 means
+    # the decision was statistically settled), and why the race ended
+    # ('separated' | 'budget_ms' | 'max_members' | 'exhausted'; ""
+    # for non-raced cycles).
+    race_rungs: int = 0
+    race_members: int = 0
+    race_separation: float = 0.0
+    race_stopped: str = ""
 
 
 @dataclasses.dataclass
@@ -37,11 +48,20 @@ class Telemetry:
     # job_id -> policy that started it (paper Table 1 attributes each
     # *job start* to the policy selected in that cycle)
     job_start_policy: Dict[int, str] = dataclasses.field(default_factory=dict)
+    # §3.2 estimate-vs-true runtime residuals: one (estimated, actual)
+    # walltime pair per observed JOBOBIT, recorded by the twin as
+    # ground truth reveals itself.  ``fan.FanSpec.from_history`` fits
+    # its lognormal runtime-noise σ to these (ROADMAP residual (b)).
+    runtime_residuals: List[tuple] = dataclasses.field(default_factory=list)
 
     def record(self, rec: CycleRecord) -> None:
         self.cycles.append(rec)
         for j in rec.started_jobs:
             self.job_start_policy[j] = rec.policy
+
+    def record_residual(self, est: float, actual: float) -> None:
+        """One revealed (estimated, actual) runtime pair."""
+        self.runtime_residuals.append((float(est), float(actual)))
 
     # ---- Table 1 ------------------------------------------------------
     def policy_start_distribution(self) -> Dict[str, float]:
@@ -70,31 +90,51 @@ class Telemetry:
         return {pol: {term: s / counts[pol] for term, s in acc.items()}
                 for pol, acc in sums.items()}
 
-    # ---- fan uncertainty (DESIGN.md §10) ------------------------------
+    # ---- fan uncertainty (DESIGN.md §10/§11) --------------------------
     def confidence_stats(self) -> Dict[str, Dict[str, float]]:
         """Mean device-computed uncertainty per policy across all fan
-        cycles (policy -> {mean_ci, mean_width, n}); cycles whose CI is
-        infinite (a fan member deadlocked) are counted separately as
-        ``n_inf`` rather than polluting the means.  Empty when no cycle
-        ran a fan/ensemble."""
+        cycles (policy -> {mean_ci, mean_width, mean_sigma, mean_fan,
+        min_fan, max_fan, n}); cycles whose CI is infinite (a fan
+        member deadlocked) are counted separately as ``n_inf`` rather
+        than polluting the means.  Empty when no cycle ran a
+        fan/ensemble.
+
+        Racing makes the per-cycle fan size F variable (a policy
+        eliminated at rung r carries the CI of F_r members, a survivor
+        that of F_max), so a raw mean of CI half-widths conflates noise
+        with sample size.  ``mean_sigma`` de-scales each cycle's CI back
+        to the member-cost standard deviation (ci·√F/1.96), an
+        F-independent noise estimate comparable across cycles of any
+        fan size; ``min_fan``/``max_fan``/``mean_fan`` report the fan
+        sizes actually used."""
         acc: Dict[str, Dict[str, float]] = {}
         for c in self.cycles:
             if c.fan_size <= 1 or not c.cost_ci:
                 continue
             for pol, ci in c.cost_ci.items():
-                st = acc.setdefault(pol, {"mean_ci": 0.0, "mean_width": 0.0,
-                                          "n": 0, "n_inf": 0})
+                st = acc.setdefault(
+                    pol, {"mean_ci": 0.0, "mean_width": 0.0,
+                          "mean_sigma": 0.0, "mean_fan": 0.0,
+                          "min_fan": float(c.fan_size),
+                          "max_fan": float(c.fan_size),
+                          "n": 0, "n_inf": 0})
                 width = c.fan_width.get(pol, float("inf"))
                 if ci == float("inf") or width == float("inf"):
                     st["n_inf"] += 1
                     continue
                 st["mean_ci"] += ci
                 st["mean_width"] += width
+                st["mean_sigma"] += ci * (c.fan_size ** 0.5) / 1.96
+                st["mean_fan"] += c.fan_size
+                st["min_fan"] = min(st["min_fan"], float(c.fan_size))
+                st["max_fan"] = max(st["max_fan"], float(c.fan_size))
                 st["n"] += 1
         for st in acc.values():
             n = max(int(st["n"]), 1)
             st["mean_ci"] /= n
             st["mean_width"] /= n
+            st["mean_sigma"] /= n
+            st["mean_fan"] /= n
         return acc
 
     # ---- overhead (paper: "a few seconds per scheduling cycle") -------

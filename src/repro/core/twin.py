@@ -25,6 +25,7 @@ from repro.core.events import Event, EventBus, EventKind
 from repro.core.fan import FanSpec, normalize_fan
 from repro.core.objective import ObjectiveLike, resolve_goal
 from repro.core.policies import PAPER_POOL, PoolLike, normalize_pool
+from repro.core.race import RaceSpec, normalize_race
 from repro.core.scoring import ScoreWeights
 from repro.core.state import SimState, empty_state
 
@@ -67,6 +68,15 @@ class SchedTwin:
         carry device-computed per-policy confidence intervals, recorded
         in telemetry with no host recompute.  Mutually exclusive with
         ``ensemble > 1``.
+    race : optional ``race.RaceSpec`` (or bare ``FanSpec``/int) — decide
+        via the successive-halving fan race (DESIGN.md §11): every
+        policy starts at a small fan F₀, per-rung CIs eliminate
+        statistically-dominated policies, survivors double F, and CRN
+        prefix-stability means each rung replays only the new member
+        suffix.  Same winner as ``fan=`` at the race's F_max, at a
+        fraction of the member budget; per-cycle rungs/members/
+        separation land in ``CycleRecord``.  Mutually exclusive with
+        ``fan=`` and ``ensemble > 1``.
     engine : the policy-batched what-if engine (``core.engine``); pick
         the scheduling-pass backend here (``DrainEngine("pallas")`` for
         the TPU kernel, ``DrainEngine("auto")`` to pick per platform).
@@ -87,10 +97,14 @@ class SchedTwin:
                  ensemble: int = 1,
                  ensemble_noise: float = 0.3,
                  fan: Optional[FanSpec] = None,
+                 race: Optional[RaceSpec] = None,
                  engine: Optional[DrainEngine] = None,
                  seed: int = 0) -> None:
         if fan is not None and ensemble > 1:
             raise ValueError("fan= and ensemble>1 are mutually exclusive")
+        if race is not None and (fan is not None or ensemble > 1):
+            raise ValueError(
+                "race= is mutually exclusive with fan= and ensemble>1")
         self.bus = bus
         self.qrun = qrun
         self.pool = normalize_pool(pool)
@@ -101,6 +115,7 @@ class SchedTwin:
         self.ensemble = ensemble
         self.ensemble_noise = ensemble_noise
         self.fan = normalize_fan(fan) if fan is not None else None
+        self.race = normalize_race(race) if race is not None else None
         self.engine = engine if engine is not None else DrainEngine()
         self._key = jax.random.PRNGKey(seed)
 
@@ -112,6 +127,7 @@ class SchedTwin:
         needs_cycle = False
         t_latest = float(self.state.now)
         for ev in events:
+            self._capture_residual(ev)
             self.state, cycle = sync.apply_event(self.state, ev)
             needs_cycle |= cycle
             t_latest = max(t_latest, ev.time)
@@ -122,9 +138,24 @@ class SchedTwin:
     def on_event(self, ev: Event) -> None:
         """Push-mode entry point (bus.subscribe)."""
         self.bus.read(self.CONSUMER)  # keep offset in step with pushes
+        self._capture_residual(ev)
         self.state, needs_cycle = sync.apply_event(self.state, ev)
         if needs_cycle:
             self._decision_cycle(ev.time)
+
+    def _capture_residual(self, ev: Event) -> None:
+        """§3.2 estimate-vs-true runtime residual: a JOBOBIT reveals the
+        actual walltime (obit time − recorded start) of a job the twin
+        only ever knew by its user estimate.  Recorded host-side into
+        telemetry before the mirror forgets the start time;
+        ``FanSpec.from_history`` fits its lognormal σ to these pairs."""
+        if ev.kind != EventKind.JOBOBIT or ev.job_id < 0:
+            return
+        start = float(self.state.jobs.start_t[ev.job_id])
+        if start < 0.0:  # never started in the mirror — no ground truth
+            return
+        est = float(self.state.jobs.est_runtime[ev.job_id])
+        self.telemetry.record_residual(est, ev.time - start)
 
     # ------------------------------------------------------------------
     def _decision_cycle(self, t: float) -> None:
@@ -133,8 +164,13 @@ class SchedTwin:
             self.state = sync.resync_free_nodes(
                 self.state, self.free_nodes_probe())
 
+        race_out = None
         with telemetry.StopWatch() as sw:
-            if self.fan is not None:
+            if self.race is not None:
+                decision, race_out = self.engine.decide_race(
+                    self.state, self.pool.spec, self.race,
+                    objective=self.objective)
+            elif self.fan is not None:
                 decision = self.engine.decide_fan(
                     self.state, self.pool.spec, self.fan,
                     objective=self.objective)
@@ -177,12 +213,19 @@ class SchedTwin:
             fan_width = {name: float(w)
                          for name, w in zip(self.pool.names,
                                             np.asarray(decision.fan_width))}
+        race_fields = {}
+        if race_out is not None:
+            race_fields = dict(
+                race_rungs=len(race_out.rungs),
+                race_members=int(race_out.members),
+                race_separation=float(np.min(race_out.separation)),
+                race_stopped=race_out.stopped)
         self.telemetry.record(telemetry.CycleRecord(
             time=t, wall_seconds=sw.seconds, policy=winner,
             costs=costs, n_started=len(job_ids), started_jobs=job_ids,
             objective=str(self.objective), term_costs=term_costs,
             cost_ci=cost_ci, fan_width=fan_width,
-            fan_size=decision.fan_size))
+            fan_size=decision.fan_size, **race_fields))
 
         if job_ids:
             # ⑦ qrun — the physical system will emit RUNJOB events that

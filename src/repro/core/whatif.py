@@ -53,7 +53,7 @@ from repro.core.state import QUEUED, SimState
 __all__ = [
     "Decision", "PolicyPool", "decide", "decide_ensemble",
     "decide_legacy_vmap", "sharded_whatif", "sharded_replay_grid",
-    "sharded_fan_grid", "paper_pool", "pool_array",
+    "sharded_fan_grid", "sharded_race_grid", "paper_pool", "pool_array",
 ]
 
 #: Anything the public decide functions take as a pool.
@@ -559,6 +559,106 @@ def sharded_fan_grid(mesh: Mesh, axis: str = "data",
             cost_ci=ci,
             fan_width=width,
         )
+
+    return wrapper
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "P", "B", "S", "lo", "width"))
+def _race_block_inputs(submit, nodes, est, true_rt, valid, totals, pool,
+                       spec, P, B, S, lo, width, blo):
+    """One fixed-shape RACING-WINDOW block, expanded on device: window
+    rows ``r = blo .. blo+B`` of the rung's ``S·width`` rectangle
+    (``r = s·width + w`` ⇒ member ``φ = lo + w``; ids past S·width are
+    inert padding).  ``lo``/``width`` are STATIC — the rung schedule is
+    fixed, so each rung compiles once — while ``blo`` is a dynamic
+    operand: all blocks within a rung share one compiled expansion."""
+    from repro.core.engine import _assemble_replay_inputs
+    from repro.core.fan import perturb_window
+    r = blo + jnp.arange(B)
+    rows = perturb_window(submit, nodes, est, true_rt, valid, totals,
+                          spec, r, lo, width, S)
+    return _assemble_replay_inputs(*rows, pool, P)
+
+
+def sharded_race_grid(mesh: Mesh, axis: str = "data",
+                      engine: Optional[DrainEngine] = None,
+                      objective: ObjectiveLike = None, *,
+                      race=None,
+                      block_size: Optional[int] = None):
+    """Fleet-scale adaptive racing (DESIGN.md §§9–11): each rung of the
+    successive-halving race streams its ``S·width`` member-window rows
+    through the PR-6 block machinery (``_replay_block_sharded``
+    unchanged — window rows are pseudo-scenarios like any other), and
+    the controller (``race.run_race``) eliminates/terminates between
+    rungs exactly as the local ``race_grid`` does.
+
+    Because window rows are keyed per (s, φ) independently of the
+    block cut AND of the rung cut, any ``block_size`` on any mesh is
+    bit-identical to the local race — which is itself member-bitwise
+    the full ``fan_grid`` prefix (tests/test_race.py).  ``race`` is a
+    ``RaceSpec`` / ``FanSpec`` / bare int F_max; ``block_size`` counts
+    window rows per device step, rounded up to the axis size.  Returns
+    a function ``(scenarios, pool) -> race.RaceOutcome``.
+    """
+    from repro.core.des import ReplayResult
+    from repro.core.engine import (_index_pool, _scenario_arrays, as_pool,
+                                   fan_select_jit, pool_size)
+    from repro.core.race import normalize_race, run_race
+
+    eng = engine or DEFAULT_ENGINE
+    goal = resolve_goal(objective)
+    spec = normalize_race(race if race is not None else 1)
+    n_shards = mesh.shape[axis]
+
+    def wrapper(scenarios, pool: PoolArg):
+        pool_full = as_pool(_engine_pool(pool))
+        Psz = pool_size(pool_full)
+        S = int(scenarios.total_nodes.shape[0])
+        base = _scenario_arrays(scenarios)
+        sub_pools = {}
+        passes = [0]
+
+        def eval_window(active, lo, hi):
+            key = tuple(int(i) for i in active)
+            sub = sub_pools.get(key)
+            if sub is None:
+                sub = (pool_full if len(active) == Psz
+                       else _index_pool(pool_full, jnp.asarray(active)))
+                sub_pools[key] = sub
+            Pa = pool_size(sub)
+            width = hi - lo
+            R = S * width                      # window rows this rung
+            B = _round_up(block_size or R, n_shards)
+            plan_P = eng.plan(sub)
+            plan_blk = (plan_P * (B // n_shards)
+                        if plan_P is not None else None)
+            met_blocks, dead_blocks = [], []
+            for blo in range(0, R, B):
+                inputs = _race_block_inputs(*base, sub, spec.fan, Pa,
+                                            B, S, lo, width,
+                                            jnp.int32(blo))
+                res, metrics = _replay_block_sharded(
+                    eng, mesh, axis, plan_blk, *inputs)
+                passes[0] += int(res.pass_invocations.sum())
+                n_keep = (min(blo + B, R) - blo) * Pa
+                if n_keep != B * Pa:     # only the tail block trims
+                    trim = lambda x: x[:n_keep]
+                    metrics = jax.tree.map(trim, metrics)
+                    dead_blocks.append(trim(res.deadlocked))
+                else:
+                    dead_blocks.append(res.deadlocked)
+                met_blocks.append(metrics)
+            cat = (lambda *xs: xs[0] if len(xs) == 1
+                   else jnp.concatenate(xs, axis=0))
+            metrics = jax.tree.map(cat, *met_blocks)
+            dead = cat(*dead_blocks)
+            member, _, _, _, _ = fan_select_jit(
+                goal, metrics, dead, width, Pa)
+            return member
+
+        out = run_race(spec, S, Psz, goal, eval_window)
+        return out._replace(passes=passes[0])
 
     return wrapper
 

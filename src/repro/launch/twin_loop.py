@@ -15,6 +15,10 @@
         --objective "p95:avg_wait"    # Monte-Carlo fan, tail objective
     python -m repro.launch.twin_loop --replay-grid 8 --fan 128 \\
         --fan-fail 0.2 --objective "cvar:0.9:score" --prune
+    python -m repro.launch.twin_loop --fan 64 --race --budget-ms 500 \\
+        # raced fan: successive-halving to F_max=64, 500 ms anytime cap
+    python -m repro.launch.twin_loop --replay-grid 8 --fan 64 --race \\
+        --race-f0 4                   # raced S x F x P grid
 
 ``--objective`` is the administrator-configured optimization goal
 (§3.4; ``repro.core.objective``, DESIGN.md §8): the goal grammar is
@@ -26,6 +30,15 @@ logged at startup.  In twin mode it drives every decision cycle; in
 full (S scenarios × pool) baseline grid in ONE batched device replay
 (``engine.replay_grid``, DESIGN.md §6), printing per-policy metrics
 aggregated over scenarios.
+
+``--race`` turns the fixed-F fan into a successive-halving race
+(DESIGN.md §11): every policy starts at ``--race-f0`` members,
+per-rung CIs eliminate statistically-dominated policies, survivors
+double their fan up to ``--fan`` (= F_max), and CRN prefix-stability
+means each rung replays only the new member suffix.  ``--budget-ms`` /
+``--race-members`` make the race anytime.  Works in twin mode
+(``SchedTwin(race=...)``) and in ``--replay-grid`` mode (including
+sharded/block-streamed via ``--shard``/``--block-size``).
 
 ``--fan F`` evaluates every policy over an on-device Monte-Carlo fan
 of F perturbed futures (DESIGN.md §10) — runtime noise
@@ -80,6 +93,61 @@ def make_fan(args) -> "FanSpec | None":
                    failure_prob=args.fan_fail, seed=args.fan_seed)
 
 
+def make_race(args):
+    """Build the ``RaceSpec`` from --race/--race-f0/--budget-ms/
+    --race-members over the --fan* spec (None when --race is off)."""
+    if not args.race:
+        return None
+    from repro.core.race import RaceSpec
+    return RaceSpec(fan=make_fan(args), f0=args.race_f0,
+                    budget_ms=args.budget_ms or None,
+                    max_members=args.race_members or None)
+
+
+def raced_grid(args, engine, goal, pool, scen) -> None:
+    """--replay-grid --race: the raced S × F × P grid.  Eliminated
+    policies never reach full fidelity, so the report is the race
+    ledger (rungs, members, separation), not the per-policy metric
+    table a full grid prints."""
+    import time
+
+    race = make_race(args)
+    fleet = args.shard != 1 or args.block_size
+    t0 = time.perf_counter()
+    if fleet:
+        from repro.core.whatif import sharded_race_grid
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh(None if args.shard == 0 else args.shard)
+        run = sharded_race_grid(mesh, engine=engine, objective=goal,
+                                race=race,
+                                block_size=args.block_size or None)
+        out = run(scen, pool.spec)
+        mode = (f"{mesh.shape['data']} shard(s), "
+                f"block={args.block_size or 'whole rung'}")
+    else:
+        from repro.core.race import race_grid
+        out = race_grid(scen, pool.spec, race, goal, engine=engine)
+        mode = "one device per rung"
+    wall = time.perf_counter() - t0
+    S = int(out.costs.shape[0])
+    print(f"raced grid: S={S} scenarios x F_max={race.f_max} x "
+          f"P={len(pool)} policies ({mode}) in {wall:.2f}s")
+    print(f"members: {out.members} of {out.members_full} fixed-F "
+          f"({out.members_full / max(out.members, 1):.1f}x reduction), "
+          f"{len(out.rungs)} rungs, stopped={out.stopped}")
+    for r in out.rungs:
+        el = ([pool.names[i] for i in r.eliminated]
+              if r.eliminated else "-")
+        print(f"  rung [{r.lo:3d},{r.hi:3d}) x {len(r.active)} "
+              f"policies: {r.members} members, sep={r.separation:+.2f}, "
+              f"eliminated {el}")
+    names = [pool.names[int(i)] for i in out.keep]
+    best = np.asarray(out.best)
+    print(f"survivors at F={out.fan_size}: {names}")
+    print(f"objective {goal}: per-scenario winners "
+          f"{[pool.names[int(b)] for b in best]}")
+
+
 def replay_grid(args, engine: DrainEngine, goal: Objective) -> None:
     """--replay-grid: the S × P baseline grid as ONE device replay,
     with the per-scenario policy selection under ``goal`` (S × F × P
@@ -94,6 +162,8 @@ def replay_grid(args, engine: DrainEngine, goal: Objective) -> None:
                            backend=engine.backend)
     pool = cfg.make_pool()
     scen = cfg.make_scenarios()
+    if args.race:
+        return raced_grid(args, engine, cfg.make_objective(), pool, scen)
     fan = make_fan(args)
     fleet = args.shard != 1 or args.block_size
     prune_info = None
@@ -213,6 +283,22 @@ def main() -> None:
     ap.add_argument("--fan-seed", type=int, default=0,
                     help="fan PRNG seed (member draws are keyed per "
                          "(scenario, member) — deterministic, resumable)")
+    ap.add_argument("--race", action="store_true",
+                    help="race the --fan via successive halving "
+                         "(DESIGN.md §11): start every policy at "
+                         "--race-f0 members, CI-eliminate dominated "
+                         "policies per rung, double survivors' fans up "
+                         "to --fan; prefix-stable CRN means no member "
+                         "is ever replayed twice")
+    ap.add_argument("--race-f0", type=int, default=8, metavar="F0",
+                    help="rung-0 fan size for --race (default 8)")
+    ap.add_argument("--budget-ms", type=float, default=0.0, metavar="MS",
+                    help="anytime wall-clock budget per race; when it "
+                         "runs out mid-race the current best is "
+                         "returned with its achieved confidence")
+    ap.add_argument("--race-members", type=int, default=0, metavar="M",
+                    help="anytime (scenario, member, policy) triple "
+                         "budget per race")
     ap.add_argument("--prune", action="store_true",
                     help="goal-conditioned pool pruning for --replay-grid "
                          "--fan: a cheap low-F pre-pass drops policies "
@@ -253,6 +339,13 @@ def main() -> None:
                  "(the fan subsumes the estimate-noise ensemble)")
     if args.prune and not (args.fan and args.replay_grid):
         ap.error("--prune applies to --replay-grid --fan")
+    if args.race and not args.fan:
+        ap.error("--race needs --fan F (F is the race's F_max)")
+    if args.race and args.prune:
+        ap.error("--race subsumes --prune (elimination is per rung)")
+    if (args.race_f0 != 8 or args.budget_ms or args.race_members) \
+            and not args.race:
+        ap.error("--race-f0/--budget-ms/--race-members apply to --race")
     from repro.launch.cache import enable_persistent_cache
     enable_persistent_cache(enabled=not args.no_compile_cache)
     engine = DrainEngine(backend=args.backend)
@@ -285,11 +378,13 @@ def main() -> None:
     bus = EventBus()
     em = ClusterEmulator(trace, args.nodes, bus=bus, failures=failures,
                          check_invariants=True, engine=engine)
+    race = make_race(args)
     twin = SchedTwin(
         bus=bus, qrun=em.qrun, total_nodes=args.nodes,
         max_jobs=em.max_jobs, pool=pool, objective=goal,
         free_nodes_probe=lambda: em.free_nodes,
-        ensemble=args.ensemble, fan=make_fan(args), engine=engine)
+        ensemble=args.ensemble, fan=None if race else make_fan(args),
+        race=race, engine=engine)
     report = em.run(on_event=twin.pump, objective=goal)
 
     print(f"jobs={report.n_jobs} events={report.n_events} "
@@ -312,14 +407,31 @@ def main() -> None:
                           twin.telemetry.policy_start_distribution().items()})
     conf = twin.telemetry.confidence_stats()
     if conf:
-        # device-computed fan uncertainty (decide_fan / decide_ensemble
-        # stamps; DESIGN.md §10) — no host recompute.
-        F = twin.telemetry.cycles[0].fan_size
+        # device-computed fan uncertainty (decide_fan / decide_race
+        # stamps; DESIGN.md §§10–11) — no host recompute.  Racing makes
+        # the per-cycle fan size variable; report the range actually
+        # used, not cycle 0's.
+        fmin = min(st["min_fan"] for st in conf.values())
+        fmax = max(st["max_fan"] for st in conf.values())
+        f_txt = (f"F={fmin:.0f}" if fmin == fmax
+                 else f"F={fmin:.0f}..{fmax:.0f}")
         parts = " ".join(
             f"{n}=±{st['mean_ci']:.2f}(w{st['mean_width']:.1f})"
             for n, st in sorted(conf.items()))
-        print(f"fan confidence (F={F}, mean 95% CI half-width, "
+        print(f"fan confidence ({f_txt}, mean 95% CI half-width, "
               f"member spread): {parts}")
+    if race is not None and twin.telemetry.cycles:
+        cs = [c for c in twin.telemetry.cycles if c.race_stopped]
+        if cs:
+            memb = sum(c.race_members for c in cs)
+            full = len(cs) * race.f_max * len(pool)
+            stops = {}
+            for c in cs:
+                stops[c.race_stopped] = stops.get(c.race_stopped, 0) + 1
+            print(f"race: {memb} members over {len(cs)} cycles vs "
+                  f"{full} fixed-F ({full / max(memb, 1):.1f}x "
+                  f"reduction), mean {memb / len(cs):.1f}/cycle, "
+                  f"stops {stops}")
     lat = twin.telemetry.cycle_latency_stats()
     print(f"cycle latency: mean {lat['mean_s'] * 1e3:.1f} ms, "
           f"p50 {lat['p50_s'] * 1e3:.1f} ms over {lat['n']} cycles")

@@ -1,0 +1,574 @@
+"""Adaptive fan racing (DESIGN.md §11).
+
+Pins the tentpole invariants of ``core.race`` + the racing surfaces of
+``core.engine`` / ``core.whatif`` / ``core.fan`` / ``core.twin``:
+
+- WINNER INVARIANCE: an unbudgeted race selects the same winner as the
+  full-F ``fan_grid`` on every scenario — property-tested on both pass
+  backends and fuzzed over synthetic member tensors with ties and +inf;
+- F₀ == F_max is BITWISE the plain fan grid (one rung == no racing);
+- rung suffixes are CRN-prefix-stable: ``fan_window_grid(lo, w)`` is
+  bitwise the ``[lo, lo+w)`` slice of the full fan's members;
+- no (scenario, member, policy) triple is ever replayed twice — the
+  controller raises on an overlapping window and the accounting fields
+  add up (``members == Σ rung members``, all windows disjoint);
+- edge cases: P=1 pools separate immediately, all-tied costs never
+  eliminate (strict ``>``), +inf-poisoned CIs never eliminate,
+  budget/max_members stop mid-race with a consistent rectangle;
+- ``sharded_race_grid`` (any block size) is bitwise the local race;
+- ``decide_race`` at f0=F_max is bitwise ``decide_fan``, and raced twin
+  cycles stamp rungs/members/separation into telemetry;
+- ``pruned_fan_grid`` donates its pre-pass members (CRN prefix) instead
+  of re-replaying them — accounting shows the saving;
+- ``FanSpec.from_history`` fits its lognormal σ to §3.2 residuals.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.workload import poisson_trace, stack_scenarios
+from repro.core import whatif
+from repro.core.engine import DrainEngine
+from repro.core.fan import FanSpec, fit_runtime_sigma, pruned_fan_grid
+from repro.core.objective import parse_objective
+from repro.core.policies import parse_pool
+from repro.core.race import (RaceSpec, normalize_race, race_grid,
+                             run_race)
+from repro.launch.mesh import make_fleet_mesh
+
+REF = DrainEngine("reference")
+PAL = DrainEngine("pallas", interpret=True)
+
+POOL = parse_pool("fcfs,sjf,saf")
+NOISY = FanSpec(n=8, runtime_noise=0.3, burst_amplitude=0.5,
+                burst_period=600.0, failure_prob=0.3, seed=7)
+RACE = RaceSpec(fan=NOISY, f0=2)
+
+
+@pytest.fixture(scope="module")
+def scen():
+    traces = [poisson_trace(12, 16, 30.0, (1, 4), (60.0, 600.0), seed=s)
+              for s in range(3)]
+    return stack_scenarios(traces, total_nodes=16)
+
+
+# ----------------------------------------------------------------------
+# schedule / spec validation
+# ----------------------------------------------------------------------
+
+def test_rung_schedule():
+    spec = RaceSpec(fan=FanSpec(n=64), f0=8, growth=2)
+    assert spec.rungs() == ((0, 8), (8, 16), (16, 32), (32, 64))
+    # F_max not a power multiple: last rung is clipped
+    spec = RaceSpec(fan=FanSpec(n=24), f0=8)
+    assert spec.rungs() == ((0, 8), (8, 16), (16, 24))
+    # f0 >= F_max degenerates to a single full-fidelity rung
+    assert RaceSpec(fan=FanSpec(n=8), f0=8).rungs() == ((0, 8),)
+    assert RaceSpec(fan=FanSpec(n=8), f0=64).rungs() == ((0, 8),)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        RaceSpec(f0=0)
+    with pytest.raises(ValueError):
+        RaceSpec(growth=1)
+    with pytest.raises(ValueError):
+        RaceSpec(z=0.0)
+    with pytest.raises(ValueError):
+        RaceSpec(budget_ms=-1.0)
+    with pytest.raises(ValueError):
+        RaceSpec(max_members=0)
+    # normalize: FanSpec and bare int lift to the default schedule
+    assert normalize_race(NOISY).fan is NOISY
+    assert normalize_race(16).f_max == 16
+    assert normalize_race(RACE) is RACE
+
+
+# ----------------------------------------------------------------------
+# engine substrate: rung windows are CRN prefix-stable suffixes
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("eng", [REF, PAL], ids=["reference", "pallas"])
+def test_fan_window_is_bitwise_fan_slice(scen, eng):
+    full = eng.fan_grid(scen, POOL.spec, NOISY, "avg_wait")
+    for lo, hi in ((0, 2), (2, 4), (4, 8)):
+        win = eng.fan_window_grid(scen, POOL.spec, NOISY, "avg_wait",
+                                  lo=lo, width=hi - lo)
+        np.testing.assert_array_equal(
+            np.asarray(win.member_costs),
+            np.asarray(full.member_costs)[:, lo:hi],
+            err_msg=f"window [{lo},{hi})")
+        np.testing.assert_array_equal(
+            np.asarray(win.start_t),
+            np.asarray(full.start_t)[:, lo:hi])
+
+
+def test_fan_window_validates():
+    with pytest.raises(ValueError):
+        REF.fan_window_grid(None, POOL.spec, NOISY, lo=-1, width=2)
+    with pytest.raises(ValueError):
+        REF.fan_window_grid(None, POOL.spec, NOISY, lo=4, width=8)
+    with pytest.raises(ValueError):
+        REF.fan_window_grid(None, POOL.spec, NOISY, lo=0, width=0)
+
+
+# ----------------------------------------------------------------------
+# winner invariance: race == full-F fan grid, both backends
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("eng", [REF, PAL], ids=["reference", "pallas"])
+@pytest.mark.parametrize("goal", ["score", "p95:avg_wait"])
+def test_race_winner_matches_fan_grid(scen, eng, goal):
+    full = eng.fan_grid(scen, POOL.spec, NOISY, goal)
+    out = race_grid(scen, POOL.spec, RACE, goal, engine=eng)
+    np.testing.assert_array_equal(np.asarray(out.best),
+                                  np.asarray(full.best))
+    # surviving columns carry the full grid's member costs, bitwise
+    np.testing.assert_array_equal(
+        out.member_costs,
+        np.asarray(full.member_costs)[:, :out.fan_size, :][:, :, out.keep])
+
+
+def test_race_duplicated_pool_real_ties(scen):
+    # CRN makes duplicated policies bitwise-identical columns: exact
+    # ties at every rung, which strict > must never eliminate, and the
+    # first occurrence must win the tie-break — same as the full grid
+    dup = parse_pool("fcfs,sjf,fcfs")
+    full = REF.fan_grid(scen, dup.spec, NOISY, "score")
+    out = race_grid(scen, dup.spec, RACE, "score", engine=REF)
+    np.testing.assert_array_equal(out.best, np.asarray(full.best))
+    # a duplicate can only leave with its twin; the surviving set still
+    # contains the full grid's winner for every scenario
+    assert all(int(b) in set(int(i) for i in out.keep)
+               for b in np.asarray(full.best))
+
+
+def test_race_f0_equals_fmax_is_bitwise_fan_grid(scen):
+    full = REF.fan_grid(scen, POOL.spec, NOISY, "score")
+    out = race_grid(scen, POOL.spec,
+                    RaceSpec(fan=NOISY, f0=NOISY.n), "score", engine=REF)
+    assert len(out.rungs) == 1 and out.fan_size == NOISY.n
+    assert out.members == out.members_full
+    np.testing.assert_array_equal(out.member_costs,
+                                  np.asarray(full.member_costs))
+    np.testing.assert_array_equal(out.costs, np.asarray(full.costs))
+    np.testing.assert_array_equal(out.best, np.asarray(full.best))
+
+
+def test_race_winner_invariance_synthetic_fuzz():
+    # pure-controller fuzz where the CI rule is exactly sound: each
+    # column's members are constant (zero sampling noise => CI 0,
+    # elimination == true strict dominance) and random (s, p) columns
+    # are wholly +inf-poisoned (CI +inf => never eliminated; the cost
+    # is inf at EVERY fidelity, so low-rung evidence stays honest —
+    # cell-level poisoning would make a column's cost change with
+    # fidelity, which no sequential test can see coming).  Ties between
+    # columns are frequent (small-int draws).  The raced argmin must
+    # equal the full-tensor argmin for every scenario, always.
+    goal = parse_objective("mean:avg_wait")
+    rng = np.random.default_rng(11)
+    for trial in range(60):
+        S = int(rng.integers(1, 4))
+        P = int(rng.integers(1, 6))
+        member = np.tile(
+            rng.integers(-5, 6, size=(S, 1, P)).astype(np.float32),
+            (1, 8, 1))
+        if trial % 3 == 0:
+            member[rng.random(size=(S, 1, P)).repeat(8, 1) < 0.2] = np.inf
+        spec = RaceSpec(fan=FanSpec(n=8), f0=2)
+        out = run_race(spec, S, P, goal,
+                       lambda act, lo, hi: member[:, lo:hi, :][:, :, act])
+        want = np.argmin(member.mean(axis=1), axis=1)
+        np.testing.assert_array_equal(out.best, want,
+                                      err_msg=f"trial {trial}")
+
+
+def test_race_winner_invariance_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra.numpy import arrays
+
+    goal = parse_objective("mean:avg_wait")
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def run(data):
+        S = data.draw(st.integers(1, 3))
+        P = data.draw(st.integers(1, 5))
+        base = data.draw(arrays(
+            np.float32, (S, 1, P),
+            elements=st.integers(-5, 5).map(float)))
+        member = np.tile(base, (1, 8, 1))
+        poison = data.draw(arrays(np.bool_, (S, 1, P)))
+        member = np.where(np.repeat(poison, 8, 1),
+                          np.float32(np.inf), member)
+        out = run_race(
+            RaceSpec(fan=FanSpec(n=8), f0=2), S, P, goal,
+            lambda act, lo, hi: member[:, lo:hi, :][:, :, act])
+        want = np.argmin(member.mean(axis=1), axis=1)
+        np.testing.assert_array_equal(out.best, want)
+
+    run()
+
+
+# ----------------------------------------------------------------------
+# elimination edge cases (synthetic controller harness)
+# ----------------------------------------------------------------------
+
+def _serve(member):
+    return lambda act, lo, hi: member[:, lo:hi, :][:, :, act]
+
+
+def test_single_policy_separates_immediately():
+    member = np.abs(np.random.default_rng(0).normal(
+        size=(2, 8, 1))).astype(np.float32)
+    out = run_race(RaceSpec(fan=FanSpec(n=8), f0=2), 2, 1,
+                   parse_objective("mean:avg_wait"), _serve(member))
+    assert out.stopped == "separated" and out.separated
+    assert out.fan_size == 2 and len(out.rungs) == 1
+    assert (out.separation == np.inf).all()
+    np.testing.assert_array_equal(out.best, [0, 0])
+
+
+def test_single_policy_pool_end_to_end(scen):
+    solo = parse_pool("fcfs")
+    out = race_grid(scen, solo.spec, RACE, "score", engine=REF)
+    assert out.stopped == "separated"
+    assert out.fan_size == RACE.f0
+    np.testing.assert_array_equal(out.best, [0, 0, 0])
+
+
+def test_all_tied_costs_never_eliminate():
+    # CRN-identical columns: strict > keeps every policy to full
+    # fidelity and the first column wins the tie-break
+    member = np.tile(np.random.default_rng(1).normal(
+        size=(2, 8, 1)).astype(np.float32), (1, 1, 4))
+    out = run_race(RaceSpec(fan=FanSpec(n=8), f0=2), 2, 4,
+                   parse_objective("mean:avg_wait"), _serve(member))
+    assert out.stopped == "exhausted" and not out.separated
+    assert list(out.keep) == [0, 1, 2, 3]
+    assert all(r.eliminated == () for r in out.rungs)
+    np.testing.assert_array_equal(out.best, [0, 0])
+
+
+def test_inf_at_rung0_never_eliminated():
+    # policy 1 has one +inf member in rung 0 -> its CI is +inf -> its
+    # lower bound is nan/inf arithmetic -> strict > must NOT fire even
+    # though its finite members are terrible
+    member = np.zeros((1, 8, 3), np.float32)
+    member[0, :, 0] = 1.0
+    member[0, :, 1] = 100.0
+    member[0, 0, 1] = np.inf
+    member[0, :, 2] = 50.0                       # finite, clearly worse
+    out = run_race(RaceSpec(fan=FanSpec(n=8), f0=2), 1, 3,
+                   parse_objective("mean:avg_wait"), _serve(member))
+    assert 1 in out.keep           # poisoned CI survived to full fidelity
+    assert 2 not in out.keep       # finite loser was eliminated
+    np.testing.assert_array_equal(out.best, [0])
+
+
+def test_max_members_stops_mid_race():
+    member = np.random.default_rng(2).normal(
+        size=(2, 16, 3)).astype(np.float32)
+    # rung-0 members tied across policies: no elimination, no
+    # separation -> the race deterministically reaches the rung-1
+    # budget check with everyone still active
+    member[:, :2, :] = member[:, :2, :1]
+    spec = RaceSpec(fan=FanSpec(n=16), f0=2, max_members=12)
+    out = run_race(spec, 2, 3, parse_objective("mean:avg_wait"),
+                   _serve(member))
+    # rung 0 spends 2*2*3=12; any further rung busts the budget
+    assert out.stopped == "max_members"
+    assert out.members == 12 and out.fan_size == 2
+    assert out.members <= spec.max_members
+    # the reported rectangle is consistent: stats cover the survivors
+    assert out.costs.shape == (2, len(out.keep))
+    assert out.cost_ci.shape == out.costs.shape
+
+
+def test_budget_ms_stops_mid_race():
+    member = np.random.default_rng(3).normal(
+        size=(1, 16, 3)).astype(np.float32)
+    member[:, :2, :] = member[:, :2, :1]         # rung 0 tied -> continue
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0                              # 1 s per call
+        return t[0]
+
+    spec = RaceSpec(fan=FanSpec(n=16), f0=2, budget_ms=1.0)
+    out = run_race(spec, 1, 3, parse_objective("mean:avg_wait"),
+                   _serve(member), clock=clock)
+    # rung 0 always runs (anytime => SOME answer); rung 1 is refused
+    assert out.stopped == "budget_ms"
+    assert out.fan_size == 2 and len(out.rungs) == 1
+
+
+def test_overlapping_window_raises():
+    member = np.zeros((1, 8, 2), np.float32)
+    hits = []
+
+    def bad(act, lo, hi):                        # replays rung 0 twice
+        hits.append((lo, hi))
+        return member[:, 0:hi - lo, :][:, :, act]
+
+    class Cheat(RaceSpec):
+        def rungs(self):
+            return ((0, 2), (0, 2))
+
+    with pytest.raises(RuntimeError, match="replay"):
+        run_race(Cheat(fan=FanSpec(n=8), f0=2), 1, 2,
+                 parse_objective("mean:avg_wait"), bad)
+
+
+def test_no_member_replayed_twice_accounting(scen):
+    # every (s, phi, p) triple the race pays for is unique, and the
+    # ledger adds up: members == sum of rung members == len(triples)
+    triples = set()
+    seen = []
+
+    eng = REF
+    spec = RACE
+
+    def eval_window(active, lo, hi):
+        for s in range(3):
+            for phi in range(lo, hi):
+                for p in active:
+                    key = (s, phi, int(p))
+                    assert key not in triples, f"replayed {key}"
+                    triples.add(key)
+        seen.append((lo, hi, tuple(int(i) for i in active)))
+        out = eng.fan_window_grid(
+            scen, POOL.spec, spec.fan, "score", lo=lo, width=hi - lo)
+        return np.asarray(out.member_costs)[:, :, active]
+
+    out = run_race(spec, 3, 3, parse_objective("score"), eval_window)
+    assert out.members == len(triples)
+    assert out.members == sum(r.members for r in out.rungs)
+    los = [w[0] for w in seen]
+    his = [w[1] for w in seen]
+    assert los == sorted(los) and all(a == b for a, b in
+                                      zip(his[:-1], los[1:]))
+
+
+def test_race_grid_spends_fewer_members_when_separable():
+    # an easy workload — contended queue (policies genuinely differ)
+    # with low noise (tight CIs) — must separate early and spend far
+    # fewer members than the fixed-F bill, at the same winners
+    traces = [poisson_trace(24, 8, 5.0, (1, 6), (300.0, 3000.0), seed=s)
+              for s in range(3)]
+    hard = stack_scenarios(traces, total_nodes=8)
+    easy = FanSpec(n=32, runtime_noise=0.02, seed=3)
+    out = race_grid(hard, POOL.spec,
+                    RaceSpec(fan=easy, f0=2), "avg_wait", engine=REF)
+    full = REF.fan_grid(hard, POOL.spec, easy, "avg_wait")
+    np.testing.assert_array_equal(out.best, np.asarray(full.best))
+    assert out.members * 3 <= out.members_full
+    assert out.stopped == "separated"
+    # pass_invocations counts batched-drain LOOP TRIPS (max over the
+    # batch, not per-fork work), so prefix reuse can't inflate it: the
+    # race's summed rung trips never exceed per-rung trip counts times
+    # rung count — here one separated rung, so at most the full bill
+    assert 0 < out.passes <= int(full.result.pass_invocations)
+
+
+# ----------------------------------------------------------------------
+# fleet: sharded/streamed race == local race, bitwise
+# ----------------------------------------------------------------------
+
+def test_sharded_race_grid_matches_local(scen):
+    local = race_grid(scen, POOL.spec, RACE, "p95:avg_wait", engine=REF)
+    mesh = make_fleet_mesh(1)
+    for block in (None, 4):
+        got = whatif.sharded_race_grid(
+            mesh, engine=REF, objective="p95:avg_wait", race=RACE,
+            block_size=block)(scen, POOL)
+        np.testing.assert_array_equal(local.member_costs,
+                                      got.member_costs,
+                                      err_msg=f"block={block}")
+        np.testing.assert_array_equal(local.costs, got.costs)
+        np.testing.assert_array_equal(local.best, got.best)
+        np.testing.assert_array_equal(local.keep, got.keep)
+        assert got.stopped == local.stopped
+
+
+# ----------------------------------------------------------------------
+# decide_race: the twin's raced decision cycle
+# ----------------------------------------------------------------------
+
+def test_decide_race_f0_fmax_is_bitwise_decide_fan():
+    from conftest import make_cluster_state
+    pool = jnp.asarray([0, 1, 2], jnp.int32)
+    spec = FanSpec(n=8, runtime_noise=0.3, seed=5)
+    for seed in range(3):
+        state = make_cluster_state(max_jobs=48, total_nodes=32,
+                                   seed=seed, n_queued=6, n_running=2,
+                                   now=100.0 + 40.0 * seed)
+        df = REF.decide_fan(state, pool, spec, "p95:avg_wait")
+        dr, out = REF.decide_race(
+            state, pool, RaceSpec(fan=spec, f0=spec.n), "p95:avg_wait")
+        assert int(df.policy_index) == int(dr.policy_index)
+        np.testing.assert_array_equal(np.asarray(df.costs),
+                                      np.asarray(dr.costs))
+        np.testing.assert_array_equal(np.asarray(df.cost_ci),
+                                      np.asarray(dr.cost_ci))
+        np.testing.assert_array_equal(np.asarray(df.fan_width),
+                                      np.asarray(dr.fan_width))
+        np.testing.assert_array_equal(np.asarray(df.run_mask),
+                                      np.asarray(dr.run_mask))
+        assert dr.fan_size == spec.n == out.fan_size
+
+
+def test_decide_race_winner_matches_decide_fan():
+    from conftest import make_cluster_state
+    pool = jnp.asarray([0, 1, 2], jnp.int32)
+    spec = FanSpec(n=8, runtime_noise=0.3, seed=5)
+    for seed in range(3):
+        state = make_cluster_state(max_jobs=48, total_nodes=32,
+                                   seed=seed, n_queued=8, n_running=2,
+                                   now=200.0 + 30.0 * seed)
+        df = REF.decide_fan(state, pool, spec, "score")
+        dr, out = REF.decide_race(state, pool,
+                                  RaceSpec(fan=spec, f0=2), "score")
+        assert int(df.policy_index) == int(dr.policy_index)
+        np.testing.assert_array_equal(np.asarray(df.run_mask),
+                                      np.asarray(dr.run_mask))
+        assert out.fan_size == spec.n or out.stopped == "separated"
+
+
+def test_twin_race_stamps_telemetry():
+    from repro.cluster.emulator import ClusterEmulator
+    from repro.core.events import EventBus
+    from repro.core.twin import SchedTwin
+    trace = poisson_trace(10, 16, 20.0, (1, 4), (30.0, 300.0), seed=1)
+    bus = EventBus()
+    em = ClusterEmulator(trace, 16, bus=bus)
+    twin = SchedTwin(bus=bus, qrun=em.qrun, total_nodes=16,
+                     max_jobs=em.max_jobs,
+                     race=RaceSpec(fan=FanSpec(n=4, runtime_noise=0.3),
+                                   f0=2),
+                     objective="p95:avg_wait",
+                     free_nodes_probe=lambda: em.free_nodes)
+    em.run(on_event=twin.pump)
+    assert twin.telemetry.cycles, "no decision cycles ran"
+    recs = twin.telemetry.cycles
+    assert all(r.race_stopped for r in recs)
+    assert all(r.race_rungs >= 1 for r in recs)
+    assert all(0 < r.race_members <= 4 * 3 for r in recs)
+    assert all(1 <= r.fan_size <= 4 for r in recs)
+    # §3.2 residuals: every completed job reveals an (est, actual) pair
+    assert twin.telemetry.runtime_residuals
+    assert all(e > 0 and a > 0
+               for e, a in twin.telemetry.runtime_residuals)
+    # heterogeneous-F aggregation works on raced history
+    stats = twin.telemetry.confidence_stats()
+    for st in stats.values():
+        assert st["min_fan"] <= st["max_fan"]
+        if st["n"]:
+            assert st["mean_sigma"] >= 0.0
+
+
+def test_twin_rejects_race_plus_fan():
+    from repro.core.events import EventBus
+    from repro.core.twin import SchedTwin
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        SchedTwin(bus=EventBus(), qrun=lambda j, t: None, total_nodes=8,
+                  race=RaceSpec(), fan=FanSpec(n=4))
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        SchedTwin(bus=EventBus(), qrun=lambda j, t: None, total_nodes=8,
+                  race=RaceSpec(), ensemble=4)
+
+
+def test_confidence_stats_heterogeneous_fans():
+    from repro.core.telemetry import CycleRecord, Telemetry
+    tel = Telemetry()
+    for t, (f, ci) in enumerate([(4, 2.0), (16, 1.0), (64, 0.5)]):
+        tel.record(CycleRecord(
+            time=float(t), wall_seconds=0.01, policy="FCFS",
+            costs={"FCFS": 1.0}, n_started=0, started_jobs=[],
+            cost_ci={"FCFS": ci}, fan_width={"FCFS": 3.0}, fan_size=f))
+    st = tel.confidence_stats()["FCFS"]
+    assert st["n"] == 3
+    assert st["min_fan"] == 4 and st["max_fan"] == 64
+    assert st["mean_fan"] == pytest.approx(28.0)
+    # mean_sigma de-scales ci by sqrt(F)/1.96 -> F-independent
+    want = np.mean([2.0 * 2 / 1.96, 1.0 * 4 / 1.96, 0.5 * 8 / 1.96])
+    assert st["mean_sigma"] == pytest.approx(want)
+
+
+# ----------------------------------------------------------------------
+# satellite: pruned_fan_grid donates its pre-pass members
+# ----------------------------------------------------------------------
+
+def test_pruned_fan_grid_donation_accounting(scen):
+    # low-noise fan -> the pre-pass drops policies -> the full fan only
+    # pays for the suffix members of the survivors
+    easy = FanSpec(n=16, runtime_noise=0.02, seed=3)
+    full = REF.fan_grid(scen, POOL.spec, easy, "avg_wait")
+    out, info = pruned_fan_grid(scen, POOL.spec, easy, "avg_wait",
+                                engine=REF, pre_n=2)
+    np.testing.assert_array_equal(info.best, np.asarray(full.best))
+    np.testing.assert_array_equal(
+        np.asarray(out.member_costs),
+        np.asarray(full.member_costs)[:, :, info.keep])
+    S, P, Pk = 3, 3, len(np.asarray(info.keep))
+    assert info.members_full == S * easy.n * P
+    assert info.members == S * (2 * P + (easy.n - 2) * Pk)
+    if Pk < P:
+        assert info.members < info.members_full
+
+
+def test_pruned_fan_grid_no_prune_donates_everything(scen):
+    # nothing eliminated -> donation still means the pre-pass members
+    # are not paid twice: total == S*(pre*P + (n-pre)*P) == S*n*P
+    out, info = pruned_fan_grid(scen, POOL.spec, NOISY, "p95:avg_wait",
+                                engine=REF, pre_n=2)
+    full = REF.fan_grid(scen, POOL.spec, NOISY, "p95:avg_wait")
+    np.testing.assert_array_equal(
+        np.asarray(out.member_costs),
+        np.asarray(full.member_costs)[:, :, info.keep])
+    assert info.members <= info.members_full
+
+
+# ----------------------------------------------------------------------
+# satellite: FanSpec.from_history fits sigma to runtime residuals
+# ----------------------------------------------------------------------
+
+def test_fit_runtime_sigma_recovers_lognormal():
+    rng = np.random.default_rng(0)
+    est = rng.uniform(60.0, 600.0, size=4000)
+    true_sigma = 0.4
+    actual = est * np.exp(rng.normal(0.0, true_sigma, size=est.shape))
+    got = fit_runtime_sigma(list(zip(est, actual)))
+    assert got == pytest.approx(true_sigma, rel=0.1)
+
+
+def test_fit_runtime_sigma_fallback_and_filtering():
+    assert fit_runtime_sigma([]) == 0.3
+    assert fit_runtime_sigma([(100.0, 110.0)], fallback=0.7) == 0.7
+    # non-finite / non-positive pairs are dropped, not propagated
+    pairs = ([(100.0, np.inf), (0.0, 50.0), (100.0, -5.0)]
+             + [(100.0, 100.0 * np.exp(0.2 * (-1) ** i))
+                for i in range(20)])
+    got = fit_runtime_sigma(pairs)
+    assert np.isfinite(got) and got > 0
+
+
+def test_fanspec_from_history():
+    rng = np.random.default_rng(1)
+    est = rng.uniform(60.0, 600.0, size=500)
+    actual = est * np.exp(rng.normal(0.0, 0.25, size=est.shape))
+    spec = FanSpec.from_history(list(zip(est, actual)), n=16,
+                                failure_prob=0.1)
+    assert spec.n == 16 and spec.failure_prob == 0.1
+    assert spec.runtime_noise == pytest.approx(0.25, rel=0.2)
+    # a Telemetry object works directly (reads .runtime_residuals)
+    from repro.core.telemetry import Telemetry
+    tel = Telemetry()
+    for e, a in zip(est, actual):
+        tel.record_residual(e, a)
+    spec2 = FanSpec.from_history(tel, n=16, failure_prob=0.1)
+    assert spec2 == spec
+    # too little history -> documented fallback
+    assert FanSpec.from_history(Telemetry(), n=4).runtime_noise == 0.3
