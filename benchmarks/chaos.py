@@ -1,0 +1,268 @@
+"""Chaos harness — the resilience tentpole's acceptance gate (§12).
+
+Runs the twin/emulator co-simulation with ``cluster.chaos`` injecting
+every transport fault class at once (drops, duplicates, reordering,
+payload corruption, transient read failures) plus a correlated
+node-failure storm, and GATES the resilience claims:
+
+(a) **Chaos survival** — under the DEFAULT_PROFILE the twin completes
+    the FULL trace: every job runs to completion, zero decision cycles
+    crash, and the healed mirror got there through the hardened paths
+    (every fault class actually injected AND the matching ingestion
+    counters moved — a calm run that never exercised quarantine or
+    resync does not count).  GATED.
+(b) **Deadline discipline** — with the deadline guard at the default
+    budget the chaos run's miss rate is exactly 0 (every decision
+    arrived on time, degraded or not).  A tight-budget run is reported
+    (ladder engagement, achieved miss rate) but not gated — absolute
+    wall clocks are hardware-dependent.  GATED (default budget only).
+(c) **Kill + resume parity** — the same chaos run, killed mid-stream
+    and restored from a ``SchedTwin.snapshot()`` into a FRESH twin,
+    reproduces the uninterrupted run's decision sequence BITWISE
+    (cycle times, winners, started jobs) and the emulator's final
+    metrics exactly.  Chaos draws are pure functions of (seed, event
+    seq), so the resumed twin faces the identical corrupted stream —
+    any divergence is twin state that failed to round-trip.  GATED.
+
+Exit is NONZERO on any gate break.
+
+CLI:
+    PYTHONPATH=src python benchmarks/chaos.py            # full, gates on
+    PYTHONPATH=src python benchmarks/chaos.py --smoke    # CI sizing
+    PYTHONPATH=src python benchmarks/chaos.py --out bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.cluster.chaos import DEFAULT_PROFILE, ChaosBus, failure_storm
+from repro.cluster.emulator import ClusterEmulator
+from repro.cluster.workload import paper_synthetic_trace, poisson_trace
+from repro.core.events import EventBus
+from repro.core.twin import SchedTwin
+
+#: (b)'s gated budget: generous enough that even the first (compiling)
+#: cycle lands inside it on any host — the gate is about the guard's
+#: bookkeeping being exact, not about absolute speed.
+DEFAULT_BUDGET_S = 60.0
+TIGHT_BUDGET_S = 0.005
+
+
+def make_trace(smoke: bool):
+    if smoke:
+        return poisson_trace(40, 32, 8.0, (1, 8), (20.0, 200.0), seed=7), 32
+    return paper_synthetic_trace(seed=0), 32
+
+
+def build(trace, nodes, budget: Optional[float] = None):
+    """One co-simulation under the default chaos profile + a storm."""
+    bus = EventBus()
+    em = ClusterEmulator(
+        trace, nodes, bus=bus,
+        failures=failure_storm(60.0, waves=2, nodes=max(2, nodes // 8),
+                               spacing_s=150.0, duration_s=200.0))
+    view = ChaosBus(bus, DEFAULT_PROFILE)
+    twin = SchedTwin(bus=view, qrun=em.qrun, total_nodes=nodes,
+                     max_jobs=em.max_jobs,
+                     free_nodes_probe=lambda: em.free_nodes,
+                     jobs_probe=em.jobs_view, guard=budget,
+                     sleep=lambda s: None)
+    return bus, em, view, twin
+
+
+def decisions(twin) -> List:
+    """The bitwise decision fingerprint: when, who won, what started."""
+    return [(float(c.time), c.policy, tuple(int(j) for j in c.started_jobs))
+            for c in twin.telemetry.cycles]
+
+
+def run_chaos(trace, nodes, budget: Optional[float] = None) -> Dict:
+    bus, em, view, twin = build(trace, nodes, budget)
+    crashed = [0]
+
+    def pump():
+        try:
+            twin.pump()
+        except Exception:
+            crashed[0] += 1
+            raise
+
+    error = ""
+    report = None
+    try:
+        report = em.run(on_event=pump, on_quiesce=twin.flush)
+    except Exception as exc:  # noqa: BLE001 — gate evidence, not control
+        error = f"{type(exc).__name__}: {exc}"
+    res = twin.telemetry.resilience_stats()
+    return {
+        "completed": report is not None,
+        "error": error,
+        "n_jobs": int(report.n_jobs) if report else 0,
+        "expected_jobs": len(trace),
+        "makespan": float(report.makespan) if report else None,
+        "crashed_cycles": crashed[0],
+        "injected": dict(view.stats),
+        "resilience": res,
+        "dead_letters": len(twin.dead_letters),
+        "decisions": decisions(twin),
+        "end_t": np.asarray(report.end_t).tolist() if report else None,
+    }
+
+
+def run_kill_resume(trace, nodes, kill_at: int) -> Dict:
+    """(c): snapshot at cycle ``kill_at``, throw the twin away, restore
+    into a fresh one, and finish the run — all against the SAME chaos
+    stream the uninterrupted run saw."""
+    bus, em, view, twin = build(trace, nodes)
+    holder = {"twin": twin, "killed_at": 0}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+
+        def pump():
+            t = holder["twin"]
+            t.pump()
+            if not holder["killed_at"] \
+                    and len(t.telemetry.cycles) >= kill_at:
+                t.snapshot(mgr)
+                fresh = SchedTwin(bus=view, qrun=em.qrun,
+                                  total_nodes=nodes,
+                                  max_jobs=em.max_jobs,
+                                  free_nodes_probe=lambda: em.free_nodes,
+                                  jobs_probe=em.jobs_view,
+                                  sleep=lambda s: None)
+                fresh.restore(mgr)
+                holder["twin"] = fresh
+                holder["killed_at"] = len(fresh.telemetry.cycles)
+
+        report = em.run(on_event=pump,
+                        on_quiesce=lambda: holder["twin"].flush())
+    return {
+        "killed_at": holder["killed_at"],
+        "n_jobs": int(report.n_jobs),
+        "makespan": float(report.makespan),
+        "decisions": decisions(holder["twin"]),
+        "end_t": np.asarray(report.end_t).tolist(),
+    }
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_chaos.json") -> int:
+    trace, nodes = make_trace(smoke)
+    lines: List[str] = []
+
+    # (a) + (c)'s reference: the uninterrupted chaos run
+    base = run_chaos(trace, nodes)
+    inj, res = base["injected"], base["resilience"]
+    lines.append(
+        f"chaos,survival,jobs={base['n_jobs']}/{base['expected_jobs']},"
+        f"crashed={base['crashed_cycles']},"
+        f"injected={sum(inj.values())},quarantined={res['quarantined']},"
+        f"resyncs={res['resyncs']},lost={res['lost']}")
+
+    # (b) the guarded runs
+    guarded = run_chaos(trace, nodes, budget=DEFAULT_BUDGET_S)
+    gres = guarded["resilience"]
+    lines.append(
+        f"chaos,deadline,budget_s={DEFAULT_BUDGET_S},"
+        f"miss_rate={gres['miss_rate']:.3f},"
+        f"misses={gres['deadline_misses']}/{gres['cycles']},"
+        f"ladder_engaged={gres['ladder_engaged']}")
+    tight = run_chaos(trace, nodes, budget=TIGHT_BUDGET_S)
+    tres = tight["resilience"]
+    lines.append(
+        f"chaos,deadline_tight,budget_s={TIGHT_BUDGET_S},"
+        f"miss_rate={tres['miss_rate']:.3f},"
+        f"ladder_engaged={tres['ladder_engaged']},"
+        f"max_level={tres['max_level']},completed={tight['completed']}")
+
+    # (c) kill + resume against the same stream
+    kill_at = max(5, len(base["decisions"]) // 2)
+    resumed = run_kill_resume(trace, nodes, kill_at)
+    parity = resumed["decisions"] == base["decisions"]
+    metrics_parity = resumed["end_t"] == base["end_t"]
+    lines.append(
+        f"chaos,resume,killed_at={resumed['killed_at']},"
+        f"decision_parity={parity},metrics_parity={metrics_parity},"
+        f"cycles={len(resumed['decisions'])}")
+
+    doc = {
+        "benchmark": "chaos",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "sizing": {"jobs": len(trace), "nodes": nodes,
+                   "profile": {k: getattr(DEFAULT_PROFILE, k)
+                               for k in ("drop_prob", "duplicate_prob",
+                                         "reorder_prob", "corrupt_prob",
+                                         "read_failure_prob")}},
+        "survival": {k: v for k, v in base.items()
+                     if k not in ("decisions", "end_t")},
+        "deadline": {"budget_s": DEFAULT_BUDGET_S,
+                     "resilience": gres,
+                     "completed": guarded["completed"]},
+        "deadline_tight": {"budget_s": TIGHT_BUDGET_S,
+                           "resilience": tres,
+                           "completed": tight["completed"]},
+        "resume": {"killed_at": resumed["killed_at"],
+                   "decision_parity": parity,
+                   "metrics_parity": metrics_parity,
+                   "cycles": len(resumed["decisions"])},
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    lines.append(f"chaos,artifact,path={out_path}")
+    for line in lines:
+        print(line)
+
+    # ---- gates -------------------------------------------------------
+    fail: List[str] = []
+    for name, run in (("survival", base), ("deadline", guarded),
+                      ("deadline_tight", tight)):
+        if not run["completed"]:
+            fail.append(f"{name}: run aborted ({run['error']})")
+        elif run["n_jobs"] != run["expected_jobs"]:
+            fail.append(f"{name}: {run['n_jobs']}/"
+                        f"{run['expected_jobs']} jobs completed")
+        if run["crashed_cycles"]:
+            fail.append(f"{name}: {run['crashed_cycles']} cycles crashed")
+    for klass in ("drops", "duplicates", "reorders", "corruptions",
+                  "read_failures"):
+        if not base["injected"].get(klass):
+            fail.append(f"profile too calm: no {klass} injected "
+                        f"(gate proves nothing)")
+    if base["injected"]["corruptions"] and not res["quarantined"]:
+        fail.append("corruption injected but nothing quarantined")
+    if base["injected"]["duplicates"] and not res["duplicates"]:
+        fail.append("duplicates injected but none absorbed")
+    if base["injected"]["read_failures"] and not res["read_retries"]:
+        fail.append("read failures injected but never retried")
+    if gres["miss_rate"] != 0.0:
+        fail.append(f"deadline miss rate {gres['miss_rate']:.3f} != 0 "
+                    f"at the default {DEFAULT_BUDGET_S}s budget")
+    if not resumed["killed_at"]:
+        fail.append("kill+resume: the kill never triggered")
+    if not parity:
+        a, b = base["decisions"], resumed["decisions"]
+        diff = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+                    min(len(a), len(b)))
+        fail.append(f"kill+resume decision divergence at cycle {diff} "
+                    f"({len(a)} vs {len(b)} cycles)")
+    if not metrics_parity:
+        fail.append("kill+resume: emulator end-times diverged")
+    for msg in fail:
+        print(f"chaos,GATE_FAIL,{msg}")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: 40-job poisson trace")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args()
+    raise SystemExit(main(smoke=args.smoke, out_path=args.out))

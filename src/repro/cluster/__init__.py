@@ -3,11 +3,14 @@ from repro.cluster.workload import (JobSpec, ScenarioSet, bursty_trace,
                                     make_scenario, paper_synthetic_trace,
                                     poisson_trace, arch_job_mix,
                                     stack_scenarios, trace_to_arrays)
-from repro.cluster.emulator import ClusterEmulator, RunReport
+from repro.cluster.emulator import ClusterEmulator, FailureSpec, RunReport
+from repro.cluster.chaos import (ChaosBus, ChaosSpec, DEFAULT_PROFILE,
+                                 failure_storm)
 
 __all__ = [
     "JobSpec", "paper_synthetic_trace", "poisson_trace", "bursty_trace",
     "arch_job_mix", "trace_to_arrays",
     "ScenarioSet", "stack_scenarios", "make_scenario",
-    "ClusterEmulator", "RunReport",
+    "ClusterEmulator", "FailureSpec", "RunReport",
+    "ChaosBus", "ChaosSpec", "DEFAULT_PROFILE", "failure_storm",
 ]

@@ -208,6 +208,76 @@ class ClusterEmulator:
             now=jnp.float32(self.now),
         )
 
+    def jobs_view(self) -> Dict:
+        """Authoritative full job-table probe — the ``qstat`` analogue
+        of the ``free_nodes`` probe, consumed by ``sync.resync_jobs``
+        when the twin declares stream events LOST (DESIGN.md §12).
+        Exposes exactly what a scheduler CLI would: submit/start times,
+        node counts, USER estimates (never true runtimes — the §3.2
+        asymmetry), actual ends for finished jobs only, and the current
+        capacity/availability scalars."""
+        return {
+            "submit_t": self.submit_t.copy(),
+            "nodes": self.nodes.copy(),
+            "est_runtime": self.est.copy(),
+            "start_t": self.start_t.copy(),
+            "end_t": np.where(self.state == DONE, self.end_t, -1.0),
+            "state": self.state.copy(),
+            "free_nodes": int(self.free_nodes),
+            "total_nodes": int(self.capacity_nodes),
+        }
+
+    # -- crash-safe co-simulation resume (DESIGN.md §12) ----------------
+    def snapshot_state(self) -> Dict:
+        """JSON-serializable ground-truth snapshot: job arrays, event
+        heap, stale-end guards, and capacity log — everything ``run``
+        needs to continue mid-trace after a process restart (used by
+        ``twin_loop --snapshot-dir/--resume``)."""
+        return {
+            "submit_t": self.submit_t.tolist(),
+            "nodes": self.nodes.tolist(),
+            "est": self.est.tolist(),
+            "true_rt": self.true_rt.tolist(),
+            "start_t": self.start_t.tolist(),
+            "end_t": self.end_t.tolist(),
+            "state": self.state.tolist(),
+            "remaining": self.remaining.tolist(),
+            "now": float(self.now),
+            "n_events": int(self.n_events),
+            "n_restarts": int(self.n_restarts),
+            "free_nodes": int(self.free_nodes),
+            "capacity_nodes": int(self.capacity_nodes),
+            "heap": [list(item) for item in self._heap],
+            "seq": int(self._seq),
+            "end_seq": self._end_seq.tolist(),
+            "capacity_log": [list(item) for item in self._capacity_log],
+        }
+
+    def restore_state(self, d: Dict) -> None:
+        """Inverse of ``snapshot_state`` on an emulator built with the
+        same trace/failures; ``run`` then resumes the event loop from
+        exactly where the snapshot cut."""
+        self.submit_t[:] = np.asarray(d["submit_t"], dtype=np.float64)
+        self.nodes[:] = np.asarray(d["nodes"], dtype=np.int64)
+        self.est[:] = np.asarray(d["est"], dtype=np.float64)
+        self.true_rt[:] = np.asarray(d["true_rt"], dtype=np.float64)
+        self.start_t[:] = np.asarray(d["start_t"], dtype=np.float64)
+        self.end_t[:] = np.asarray(d["end_t"], dtype=np.float64)
+        self.state[:] = np.asarray(d["state"], dtype=np.int64)
+        self.remaining[:] = np.asarray(d["remaining"], dtype=np.float64)
+        self.now = float(d["now"])
+        self.n_events = int(d["n_events"])
+        self.n_restarts = int(d["n_restarts"])
+        self.free_nodes = int(d["free_nodes"])
+        self.capacity_nodes = int(d["capacity_nodes"])
+        self._heap = [(float(t), int(s), int(k), int(i))
+                      for t, s, k, i in d["heap"]]
+        heapq.heapify(self._heap)
+        self._seq = int(d["seq"])
+        self._end_seq[:] = np.asarray(d["end_seq"], dtype=np.int64)
+        self._capacity_log = [(float(t), int(c))
+                              for t, c in d["capacity_log"]]
+
     def _static_schedule(self, policy) -> None:
         started = np.asarray(self.engine.schedule_pass_starts(
             self._mirror_state(), policy))
@@ -219,7 +289,8 @@ class ClusterEmulator:
             policy_id=None,
             on_event: Optional[Callable[[], None]] = None,
             fast: bool = False,
-            objective=None) -> RunReport:
+            objective=None,
+            on_quiesce: Optional[Callable[[], bool]] = None) -> RunReport:
         """Run the full trace.
 
         static mode: pass ``policy_id`` — a legacy integer id or a
@@ -238,11 +309,22 @@ class ClusterEmulator:
         (``RunReport.objective`` / ``objective_cost``) — scheduling
         itself is unaffected (static mode runs ONE fixed policy; twin
         mode's goal lives on the ``SchedTwin``).
+
+        ``on_quiesce`` (twin mode only, e.g. ``twin.flush``) fires when
+        the event heap empties while queued jobs remain — which on a
+        clean stream never happens, but under a lossy bus (chaos
+        testing, real deployments) means the consumer missed the events
+        that would have started them.  If the hook returns True (it
+        reconciled and issued qruns, pushing fresh end events) the loop
+        resumes; otherwise the run ends and ``_report`` raises as
+        before.
         """
         if (policy_id is None) == (on_event is None):
             raise ValueError("exactly one of policy_id / on_event required")
+        if on_quiesce is not None and on_event is None:
+            raise ValueError("on_quiesce requires twin (on_event) mode")
         return self._stamp_objective(
-            self._run(policy_id, on_event, fast), objective)
+            self._run(policy_id, on_event, fast, on_quiesce), objective)
 
     def _stamp_objective(self, report: RunReport, objective) -> RunReport:
         if objective is not None:
@@ -263,7 +345,8 @@ class ClusterEmulator:
     def _run(self,
              policy_id,
              on_event: Optional[Callable[[], None]],
-             fast: bool) -> RunReport:
+             fast: bool,
+             on_quiesce: Optional[Callable[[], bool]] = None) -> RunReport:
         if fast:
             if policy_id is None:
                 raise ValueError("fast=True requires static mode")
@@ -329,6 +412,15 @@ class ClusterEmulator:
 
             if self.check_invariants:
                 self._assert_invariants()
+
+            if not self._heap and on_quiesce is not None and \
+                    bool((self.state == QUEUED).any()):
+                # Stream quiesced with jobs stuck in QUEUED: on a lossy
+                # bus the consumer may have missed the very events that
+                # would have started them (and no future event will
+                # re-prompt it).  Let it reconcile; any qruns it issues
+                # push fresh end events and the loop resumes.
+                on_quiesce()
 
         return self._report()
 

@@ -1,5 +1,8 @@
 """SchedTwin core: the paper's contribution as composable JAX modules."""
-from repro.core.events import Event, EventBus, EventKind
+from repro.core.events import (BusReadError, DeadLetter, Event, EventBus,
+                               EventKind, SeqTracker, read_with_retry,
+                               validate_event)
+from repro.core.guard import LEVEL_NAMES, DeadlineGuard, GuardSpec
 from repro.core.state import (DONE, INVALID, QUEUED, RUNNING, JobTable,
                               SimState, empty_jobs, empty_state)
 from repro.core.policies import (EXTENDED_POOL, FAM_EXP, FAM_LIN, FAM_WFP,
@@ -38,6 +41,9 @@ from repro.core.twin import SchedTwin
 
 __all__ = [
     "Event", "EventBus", "EventKind",
+    "BusReadError", "DeadLetter", "SeqTracker", "read_with_retry",
+    "validate_event",
+    "GuardSpec", "DeadlineGuard", "LEVEL_NAMES",
     "JobTable", "SimState", "empty_jobs", "empty_state",
     "INVALID", "QUEUED", "RUNNING", "DONE",
     "WFP", "FCFS", "SJF", "PAPER_POOL", "EXTENDED_POOL",

@@ -807,7 +807,7 @@ def _decide_fan(engine: DrainEngine, state: SimState, pool: EnginePool,
     Selection is the goal's distributional reduction of the per-member
     costs; deadlocked members cost +inf (a policy whose tail deadlocks
     is exactly as bad as the reduction is risk-averse)."""
-    from repro.core.fan import _member_draws
+    from repro.core.fan import _member_draws, failure_downs
     k = pool_size(pool)
     cap = state.jobs.capacity
     F = spec.n
@@ -827,12 +827,14 @@ def _decide_fan(engine: DrainEngine, state: SimState, pool: EnginePool,
             states = states._replace(jobs=states.jobs._replace(
                 est_runtime=jnp.repeat(est_m, k, axis=0)))
         if spec.failure_prob > 0.0:
-            hit = (u[:, 0] < spec.failure_prob) & ~exact
-            frac = u[:, 1] * spec.failure_frac
             tot = states.total_nodes                          # (F·k,)
-            down = jnp.floor(
-                state.total_nodes.astype(jnp.float32) * frac)
-            down = jnp.where(hit, down.astype(tot.dtype), 0)
+            # one shared implementation with the replay-side fan
+            # (fan.failure_downs): same i.i.d. draws bitwise, same
+            # correlated rack/power-domain model when failure_domains>0
+            # (s=0 — a decision has one base snapshot)
+            down = failure_downs(
+                spec, jnp.zeros_like(phi), phi, u,
+                jnp.broadcast_to(state.total_nodes, (F,)))
             down_b = jnp.repeat(down, k)
             states = states._replace(
                 free_nodes=jnp.maximum(states.free_nodes - down_b, 0),
@@ -1120,7 +1122,7 @@ def _decide_fan_window(engine: DrainEngine, state: SimState,
     pieces (costs, deadlocks, metrics, member-0 first-started) for the
     host-side race controller to accumulate — selection over the
     concatenated members happens in ``race.rung_stats``."""
-    from repro.core.fan import _member_draws
+    from repro.core.fan import _member_draws, failure_downs
     k = pool_size(pool)
     cap = state.jobs.capacity
     dist = as_distributional(objective)
@@ -1139,12 +1141,13 @@ def _decide_fan_window(engine: DrainEngine, state: SimState,
             states = states._replace(jobs=states.jobs._replace(
                 est_runtime=jnp.repeat(est_m, k, axis=0)))
         if spec.failure_prob > 0.0:
-            hit = (u[:, 0] < spec.failure_prob) & ~exact
-            frac = u[:, 1] * spec.failure_frac
             tot = states.total_nodes                          # (W·k,)
-            down = jnp.floor(
-                state.total_nodes.astype(jnp.float32) * frac)
-            down = jnp.where(hit, down.astype(tot.dtype), 0)
+            # shared with fan.perturb_rows / _decide_fan: bitwise the
+            # full fan's member draws (CRN window contract) under both
+            # the i.i.d. and the correlated-domain model
+            down = failure_downs(
+                spec, jnp.zeros_like(phi), phi, u,
+                jnp.broadcast_to(state.total_nodes, (width,)))
             down_b = jnp.repeat(down, k)
             states = states._replace(
                 free_nodes=jnp.maximum(states.free_nodes - down_b, 0),

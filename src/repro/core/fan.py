@@ -40,7 +40,22 @@ comparisons across policies rely on):
   loses ``U[0, failure_frac]`` of its nodes for the whole replay (the
   emulator's ``FailureSpec`` timeline collapsed to its worst case);
   members whose capacity can no longer fit a job legitimately deadlock
-  and contribute ``+inf`` member costs.
+  and contribute ``+inf`` member costs.  With ``failure_domains = D >
+  0`` the i.i.d. per-member draw is replaced by a CORRELATED
+  rack/power-domain model (ROADMAP risk residual c): the cluster is
+  split into D equal domains, each domain d of scenario s carries a
+  latent fragility ``q[s, d]`` keyed on ``(seed, s, d)`` ONLY — shared
+  by every member and persistent across racing rungs, member windows,
+  and repeated decisions (the same domains are the weak ones
+  everywhere) — and member φ fails exactly the domains whose
+  threshold ``min(2·failure_prob·q[s, d], 1)`` exceeds its single
+  uniform draw.  Failures therefore arrive in domain-sized chunks,
+  member failure sets are NESTED (a more unlucky member loses a
+  superset of domains), and members are positively correlated through
+  the shared fragilities, while the marginal per-domain failure rate
+  stays ``failure_prob`` (exactly for ``failure_prob ≤ 0.5``; clipped
+  above).  ``failure_frac`` caps the total fraction lost.  ``D = 0``
+  (default) keeps the legacy i.i.d. model bit-for-bit.
 
 Member φ=0 is always EXACT (no perturbation): it is the fan-less
 prediction, so an F=1 fan is bitwise the PR-6 replay for ANY spec, and
@@ -76,6 +91,7 @@ __all__ = [
     "FanSpec", "PruneInfo", "perturb_block", "perturb_rows",
     "perturb_window", "materialize_fan", "dominance_keep",
     "pruned_fan_grid", "normalize_fan", "fit_runtime_sigma",
+    "failure_downs",
 ]
 
 
@@ -95,6 +111,7 @@ class FanSpec:
     burst_period: float = 3600.0  # arrival warp period (seconds)
     failure_prob: float = 0.0     # P(member loses nodes) in [0, 1]
     failure_frac: float = 0.25    # max fraction of nodes lost
+    failure_domains: int = 0      # D rack/power domains (0 = i.i.d.)
     seed: int = 0
 
     def __post_init__(self) -> None:
@@ -110,6 +127,8 @@ class FanSpec:
             raise ValueError("failure_prob must be in [0, 1]")
         if not 0.0 <= self.failure_frac <= 1.0:
             raise ValueError("failure_frac must be in [0, 1]")
+        if self.failure_domains < 0:
+            raise ValueError("failure_domains must be >= 0")
         if self.runtime_noise < 0.0:
             raise ValueError("runtime_noise must be >= 0")
 
@@ -183,6 +202,58 @@ def _member_draws(seed: int, s: jax.Array, phi: jax.Array, J: int):
     return eps, phase, u
 
 
+# Domain-fragility key tag: folded where the member φ normally goes, so
+# the chain stays (seed → s → ·) but can NEVER collide with a real
+# member (fans are orders of magnitude smaller than 2^31 − 1).
+_DOMAIN_TAG = 0x7FFFFFFF
+
+
+def _domain_fragility(seed: int, s: jax.Array, D: int) -> jax.Array:
+    """Latent fragilities ``q[s, :] ∈ [0, 1)`` of the D rack/power
+    domains of ONE scenario — keyed on ``(seed, s, d)`` only, NO member
+    φ in the chain: every member, racing rung window, and repeated
+    decision sees the SAME weak domains (persistence across time)."""
+    k = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(seed), s), _DOMAIN_TAG)
+    return jax.random.uniform(k, (D,))
+
+
+def failure_downs(spec: FanSpec, s: jax.Array, phi: jax.Array,
+                  u: jax.Array, tot: jax.Array) -> jax.Array:
+    """Per-row node-capacity reductions of the failure model — the ONE
+    implementation shared by ``perturb_rows`` (replay-side fans) and
+    the drain-side ``engine._decide_fan``, so both fan surfaces agree
+    on the correlation structure.
+
+    ``u`` is the (B, 2) member uniform pair from ``_member_draws``;
+    ``s``/``phi`` are the (B,) scenario/member ids; ``tot`` the (B,)
+    capacities.  Returns (B,) reductions in ``tot``'s dtype; exact
+    members (φ=0) always get 0.  ``failure_domains == 0`` reproduces
+    the legacy i.i.d. draw bit-for-bit; ``D > 0`` is the comonotone
+    domain model documented in the module docstring (member φ fails
+    domain d iff ``u[φ, 0] < min(2·p·q[s, d], 1)`` — one uniform per
+    member thresholded against the shared fragilities, so failure sets
+    are nested across members and marginally P(fail) = p per domain
+    for p ≤ 0.5), losing ``floor(tot · n_failed / D)`` nodes capped at
+    ``floor(tot · failure_frac)``."""
+    exact = phi == 0
+    totf = tot.astype(jnp.float32)
+    if spec.failure_domains > 0:
+        D = spec.failure_domains
+        q = jax.vmap(functools.partial(
+            _domain_fragility, spec.seed, D=D))(s)            # (B, D)
+        thresh = jnp.minimum(2.0 * spec.failure_prob * q, 1.0)
+        hit_d = (u[:, :1] < thresh) & (~exact)[:, None]       # (B, D)
+        n_fail = hit_d.sum(axis=1).astype(jnp.float32)
+        down = jnp.floor(totf * (n_fail / D))
+        down = jnp.minimum(down, jnp.floor(totf * spec.failure_frac))
+    else:
+        hit = (u[:, 0] < spec.failure_prob) & ~exact
+        frac = u[:, 1] * spec.failure_frac
+        down = jnp.where(hit, jnp.floor(totf * frac), 0.0)
+    return down.astype(tot.dtype)
+
+
 def perturb_rows(submit, nodes, est, true_rt, valid, totals,
                  spec: FanSpec, s: jax.Array, phi: jax.Array,
                  inert: jax.Array):
@@ -221,11 +292,8 @@ def perturb_rows(submit, nodes, est, true_rt, valid, totals,
             warped = jax.lax.cummax(warped, axis=1)
             sub = jnp.where(exact[:, None], sub, warped)
         if spec.failure_prob > 0.0:
-            hit = (u[:, 0] < spec.failure_prob) & ~exact
-            frac = u[:, 1] * spec.failure_frac
-            down = jnp.floor(tot.astype(jnp.float32) * frac)
-            down = down.astype(tot.dtype)
-            tot = jnp.where(hit, jnp.maximum(tot - down, 1), tot)
+            down = failure_downs(spec, s, phi, u, tot)
+            tot = jnp.maximum(tot - down, 1)
 
     val = val & ~inert[:, None]
     tot = jnp.where(inert, jnp.ones_like(tot), tot)

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -40,6 +40,38 @@ class CycleRecord:
     race_members: int = 0
     race_separation: float = 0.0
     race_stopped: str = ""
+    # deadline guard accounting (DESIGN.md §12), stamped by
+    # SchedTwin(guard=...): the degradation-ladder level this cycle ran
+    # at (0 = full decision, 1 = shrunk race/fan, 2 = static fallback
+    # pool, 3 = hold incumbent), the wall-clock budget it ran under
+    # (0 = unguarded), the remaining margin (budget − wall_seconds;
+    # negative on a miss), and whether the cycle overran its budget.
+    guard_level: int = 0
+    deadline_s: float = 0.0
+    margin_s: float = 0.0
+    deadline_miss: bool = False
+
+
+@dataclasses.dataclass
+class IngestStats:
+    """Hardened-ingestion counters (DESIGN.md §12), bumped by the twin's
+    pump path as it sanitizes the stream: events quarantined to the
+    dead-letter queue, duplicate/out-of-order ``seq`` deliveries
+    absorbed idempotently, sequence gaps detected (and those abandoned
+    as lost after the reorder window), probe resyncs triggered, and
+    bus-read retry/backoff activity."""
+
+    quarantined: int = 0     # malformed events sent to the DLQ
+    duplicates: int = 0      # already-applied seq, dropped idempotently
+    reordered: int = 0       # events that arrived behind a newer seq
+    gaps: int = 0            # seq gaps first observed (pending holes)
+    lost: int = 0            # holes abandoned after the reorder window
+    resyncs: int = 0         # authoritative probe reconciliations
+    read_retries: int = 0    # bus reads retried after transient failure
+    read_failures: int = 0   # reads that exhausted every retry
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -53,6 +85,10 @@ class Telemetry:
     # ground truth reveals itself.  ``fan.FanSpec.from_history`` fits
     # its lognormal runtime-noise σ to these (ROADMAP residual (b)).
     runtime_residuals: List[tuple] = dataclasses.field(default_factory=list)
+    # hardened-ingestion counters, owned here so one resilience report
+    # covers both the guard (per-cycle records) and the pump (stream
+    # sanitization) — the twin bumps these in place.
+    ingest: IngestStats = dataclasses.field(default_factory=IngestStats)
 
     def record(self, rec: CycleRecord) -> None:
         self.cycles.append(rec)
@@ -137,6 +173,34 @@ class Telemetry:
             st["mean_fan"] /= n
         return acc
 
+    # ---- resilience (DESIGN.md §12) -----------------------------------
+    def resilience_stats(self) -> Dict[str, float]:
+        """One flat report of how hard the runtime had to fight: deadline
+        misses and ladder engagements from the per-cycle guard stamps,
+        plus the ingestion counters.  ``ladder_engaged`` counts cycles
+        decided at level > 0 (the guard degraded the decision to make
+        the deadline); ``miss_rate`` is misses over guarded cycles
+        (cycles with a budget), 0.0 when nothing was guarded."""
+        guarded = [c for c in self.cycles if c.deadline_s > 0.0]
+        misses = sum(1 for c in guarded if c.deadline_miss)
+        engaged = sum(1 for c in self.cycles if c.guard_level > 0)
+        out: Dict[str, float] = {
+            "cycles": len(self.cycles),
+            "guarded_cycles": len(guarded),
+            "deadline_misses": misses,
+            "miss_rate": misses / len(guarded) if guarded else 0.0,
+            "ladder_engaged": engaged,
+            "max_level": max((c.guard_level for c in self.cycles),
+                             default=0),
+            "min_margin_s": min((c.margin_s for c in guarded),
+                                default=0.0),
+        }
+        for lvl in range(1, 4):
+            out[f"level{lvl}_cycles"] = sum(
+                1 for c in self.cycles if c.guard_level == lvl)
+        out.update(self.ingest.as_dict())
+        return out
+
     # ---- overhead (paper: "a few seconds per scheduling cycle") -------
     def cycle_latency_stats(self) -> Dict[str, float]:
         if not self.cycles:
@@ -152,10 +216,17 @@ class Telemetry:
 
 
 class StopWatch:
+    """Wall-clock context manager.  ``clock`` is injectable so the
+    deadline guard's ladder decisions are reproducible under a fake
+    clock in tests (the same seam ``race.run_race`` exposes)."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self._clock = clock
+
     def __enter__(self) -> "StopWatch":
-        self._t0 = time.perf_counter()
+        self._t0 = self._clock()
         return self
 
     def __exit__(self, *exc) -> Optional[bool]:
-        self.seconds = time.perf_counter() - self._t0
+        self.seconds = self._clock() - self._t0
         return None

@@ -61,6 +61,7 @@ riding with the 7 static policies (k=32 forks, ONE batched drain):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import numpy as np
 
@@ -305,6 +306,34 @@ def main() -> None:
                          "the objective provably never selects, then the "
                          "full fan runs on the survivors")
     ap.add_argument("--failures", type=int, default=0)
+    ap.add_argument("--budget-s", type=float, default=0.0, metavar="S",
+                    help="wall-clock budget per decision cycle "
+                         "(guard.DeadlineGuard, DESIGN.md §12): under "
+                         "pressure the twin degrades down the ladder "
+                         "(shrunk race/fan -> static pool -> hold "
+                         "incumbent) instead of deciding late")
+    ap.add_argument("--chaos", action="store_true",
+                    help="read the bus through cluster.chaos.ChaosBus "
+                         "with the default fault profile (drops, dups, "
+                         "reordering, corruption, transient read "
+                         "failures) — the hardened ingestion layer must "
+                         "absorb all of it")
+    ap.add_argument("--snapshot-dir", default="", metavar="DIR",
+                    help="persist crash-safe twin snapshots (SimState + "
+                         "consumer offset + RNG key + telemetry + "
+                         "emulator/bus state) under DIR via "
+                         "checkpoint.CheckpointManager")
+    ap.add_argument("--snapshot-every", type=int, default=25, metavar="N",
+                    help="snapshot every N decision cycles (with "
+                         "--snapshot-dir; default 25)")
+    ap.add_argument("--kill-after-cycle", type=int, default=0, metavar="K",
+                    help="simulate a crash: snapshot and hard-exit after "
+                         "decision cycle K (requires --snapshot-dir); "
+                         "rerun with --resume to continue")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the co-simulation from the latest "
+                         "snapshot in --snapshot-dir (same flags as the "
+                         "original run)")
     ap.add_argument("--backend",
                     choices=sorted(PASS_BACKENDS) + ["auto"],
                     default="auto",
@@ -346,6 +375,12 @@ def main() -> None:
     if (args.race_f0 != 8 or args.budget_ms or args.race_members) \
             and not args.race:
         ap.error("--race-f0/--budget-ms/--race-members apply to --race")
+    if args.replay_grid and (args.chaos or args.snapshot_dir
+                             or args.budget_s):
+        ap.error("--chaos/--snapshot-dir/--budget-s apply to the twin "
+                 "co-simulation, not --replay-grid")
+    if (args.kill_after_cycle or args.resume) and not args.snapshot_dir:
+        ap.error("--kill-after-cycle/--resume require --snapshot-dir")
     from repro.launch.cache import enable_persistent_cache
     enable_persistent_cache(enabled=not args.no_compile_cache)
     engine = DrainEngine(backend=args.backend)
@@ -376,16 +411,70 @@ def main() -> None:
                 for _ in range(args.failures)]
 
     bus = EventBus()
+    manager = None
+    if args.snapshot_dir:
+        from repro.checkpoint import CheckpointManager
+        manager = CheckpointManager(args.snapshot_dir)
+    if args.resume:
+        # Peek at the manifest for the persisted bus log BEFORE building
+        # the emulator/twin (both need the bus); twin.restore() then
+        # re-reads the same step for everything else.
+        import json
+        import os
+
+        from repro.checkpoint.manager import MANIFEST, step_dir
+        step = manager.latest_step()
+        if step is None:
+            raise SystemExit(f"--resume: no snapshot under "
+                             f"{args.snapshot_dir!r}")
+        with open(os.path.join(step_dir(args.snapshot_dir, step),
+                               MANIFEST)) as f:
+            peek = json.load(f).get("extra", {}).get("app", {})
+        bus = EventBus.from_dump(peek.get("bus", []))
     em = ClusterEmulator(trace, args.nodes, bus=bus, failures=failures,
                          check_invariants=True, engine=engine)
     race = make_race(args)
+    view = bus
+    if args.chaos:
+        from repro.cluster.chaos import DEFAULT_PROFILE, ChaosBus
+        view = ChaosBus(bus, dataclasses.replace(DEFAULT_PROFILE,
+                                                 seed=args.seed))
+        print(f"chaos: {view.spec}")
     twin = SchedTwin(
-        bus=bus, qrun=em.qrun, total_nodes=args.nodes,
+        bus=view, qrun=em.qrun, total_nodes=args.nodes,
         max_jobs=em.max_jobs, pool=pool, objective=goal,
         free_nodes_probe=lambda: em.free_nodes,
+        jobs_probe=em.jobs_view, guard=args.budget_s or None,
         ensemble=args.ensemble, fan=None if race else make_fan(args),
         race=race, engine=engine)
-    report = em.run(on_event=twin.pump, objective=goal)
+    if args.resume:
+        step, app = twin.restore(manager)
+        em.restore_state(app["emulator"])
+        print(f"resumed from snapshot step {step} "
+              f"({len(twin.telemetry.cycles)} cycles already decided)")
+
+    def take_snapshot():
+        twin.snapshot(manager, app_extra={
+            "emulator": em.snapshot_state(), "bus": bus.dump()})
+
+    snap_next = [args.snapshot_every]
+
+    def pump():
+        twin.pump()
+        cyc = len(twin.telemetry.cycles)
+        if manager is not None and cyc >= snap_next[0]:
+            take_snapshot()
+            snap_next[0] = cyc + args.snapshot_every
+        if args.kill_after_cycle and cyc >= args.kill_after_cycle:
+            take_snapshot()
+            raise SystemExit(
+                f"killed after cycle {cyc} (snapshot persisted under "
+                f"{args.snapshot_dir!r}; rerun with --resume)")
+
+    report = em.run(on_event=pump, objective=goal,
+                    on_quiesce=twin.flush)
+    if manager is not None:
+        take_snapshot()
 
     print(f"jobs={report.n_jobs} events={report.n_events} "
           f"restarts={report.n_restarts}")
@@ -435,6 +524,20 @@ def main() -> None:
     lat = twin.telemetry.cycle_latency_stats()
     print(f"cycle latency: mean {lat['mean_s'] * 1e3:.1f} ms, "
           f"p50 {lat['p50_s'] * 1e3:.1f} ms over {lat['n']} cycles")
+    res = twin.telemetry.resilience_stats()
+    print(f"resilience: miss_rate={res['miss_rate']:.3f} "
+          f"(misses={res['deadline_misses']}/{res['cycles']}, "
+          f"ladder_engaged={res['ladder_engaged']}, "
+          f"max_level={res['max_level']}), ingest: "
+          f"quarantined={res['quarantined']} dup={res['duplicates']} "
+          f"reordered={res['reordered']} gaps={res['gaps']} "
+          f"lost={res['lost']} resyncs={res['resyncs']} "
+          f"read_retries={res['read_retries']}")
+    print(f"bus health: {bus.health()}"
+          + (f", chaos injected: {view.stats}" if args.chaos else ""))
+    if twin.dead_letters:
+        print(f"dead letters: {len(twin.dead_letters)} quarantined "
+              f"(first: {twin.dead_letters[0].reason})")
 
 
 if __name__ == "__main__":

@@ -394,3 +394,154 @@ def test_twin_rejects_fan_plus_ensemble():
     with pytest.raises(ValueError, match="mutually exclusive"):
         SchedTwin(bus=EventBus(), qrun=lambda j, t: None, total_nodes=8,
                   fan=FanSpec(n=4), ensemble=4)
+
+
+# ----------------------------------------------------------------------
+# correlated failure domains (the rack/power-domain model, D > 0)
+# ----------------------------------------------------------------------
+
+DOMAINS = FanSpec(n=16, failure_prob=0.4, failure_frac=0.5,
+                  failure_domains=4, seed=11)
+
+
+def _domain_draws(spec, S, F, tot):
+    """(s, phi, u, tot) row vectors + the shared fragilities."""
+    from repro.core.fan import _domain_fragility, _member_draws
+    idx = jnp.arange(S * F)
+    s, phi = idx // F, idx % F
+    J = 4
+    _, _, u = jax.vmap(
+        lambda a, b: _member_draws(spec.seed, a, b, J))(s, phi)
+    q = np.asarray(jax.vmap(
+        lambda a: _domain_fragility(spec.seed, a, spec.failure_domains)
+    )(jnp.arange(S)))
+    totv = jnp.full((S * F,), tot, jnp.int32)
+    return s, phi, u, totv, q
+
+
+def test_domain_downs_are_quantized_capacity_levels():
+    # failures arrive in domain-sized chunks: every reduction is
+    # floor(tot * k / D) for an integer k, capped by failure_frac
+    from repro.core.fan import failure_downs
+    S, F, tot = 5, 32, 61
+    s, phi, u, totv, _ = _domain_draws(DOMAINS, S, F, tot)
+    down = np.asarray(failure_downs(DOMAINS, s, phi, u, totv))
+    D = DOMAINS.failure_domains
+    levels = {min(int(np.float32(tot) * k / D),
+                  int(np.float32(tot) * DOMAINS.failure_frac))
+              for k in range(D + 1)}
+    assert set(down.tolist()) <= levels
+    assert len(set(down.tolist())) > 1, "chaos profile too calm"
+
+
+def test_domain_failure_sets_are_nested_across_members():
+    # one uniform per member vs shared per-domain thresholds => the
+    # comonotone structure: a member with a smaller draw fails a
+    # SUPERSET of every other member's domains (same scenario)
+    S, F, tot = 4, 64, 64
+    s, phi, u, totv, q = _domain_draws(DOMAINS, S, F, tot)
+    from repro.core.fan import failure_downs
+    down = np.asarray(failure_downs(DOMAINS, s, phi, u, totv))
+    u0 = np.asarray(u)[:, 0]
+    for sc in range(S):
+        rows = [i for i in range(S * F)
+                if int(np.asarray(s)[i]) == sc and np.asarray(phi)[i] > 0]
+        order = sorted(rows, key=lambda i: u0[i])
+        # smaller draw -> at least as many failed domains -> >= loss
+        losses = [down[i] for i in order]
+        assert all(a >= b for a, b in zip(losses, losses[1:]))
+
+
+def test_domain_fragility_is_member_and_fan_independent():
+    # q is keyed on (seed, s) only: every member, window, and repeated
+    # decision sees the same weak domains (persistence across time)
+    from repro.core.fan import _domain_fragility
+    q1 = _domain_fragility(11, jnp.asarray(2), 4)
+    q2 = _domain_fragility(11, jnp.asarray(2), 4)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    # and distinct scenarios get distinct fragilities
+    q3 = _domain_fragility(11, jnp.asarray(3), 4)
+    assert not np.array_equal(np.asarray(q1), np.asarray(q3))
+
+
+def test_domain_marginal_rate_is_failure_prob():
+    # E[min(2 p q, 1)] over q ~ U[0,1) equals p for p <= 0.5: the
+    # correlation reshapes the joint, not the per-domain marginal
+    from repro.core.fan import _domain_fragility
+    p, D, S = 0.3, 8, 4000
+    q = np.asarray(jax.vmap(
+        lambda s: _domain_fragility(11, s, D))(jnp.arange(S)))
+    thresh = np.minimum(2.0 * p * q, 1.0)
+    assert abs(thresh.mean() - p) < 0.01
+
+
+def test_domain_member_zero_exact(scen):
+    base = REF.replay_grid(scen, POOL.spec)
+    fan = REF.fan_grid(scen, POOL.spec, DOMAINS)
+    np.testing.assert_array_equal(np.asarray(fan.member_costs)[:, 0],
+                                  np.asarray(base.costs))
+
+
+@pytest.mark.parametrize("eng", [REF, PAL], ids=["reference", "pallas"])
+def test_domain_f1_fan_is_bitwise_replay_grid(scen, eng):
+    spec = dataclasses.replace(DOMAINS, n=1)
+    base = eng.replay_grid(scen, POOL.spec)
+    fan = eng.fan_grid(scen, POOL.spec, spec)
+    np.testing.assert_array_equal(np.asarray(base.costs),
+                                  np.asarray(fan.costs))
+    np.testing.assert_array_equal(np.asarray(base.end_t),
+                                  np.asarray(fan.end_t[:, 0]))
+
+
+def test_domain_members_are_prefix_stable(scen):
+    f16 = REF.fan_grid(scen, POOL.spec, DOMAINS, "p95:avg_wait")
+    f4 = REF.fan_grid(scen, POOL.spec,
+                      dataclasses.replace(DOMAINS, n=4), "p95:avg_wait")
+    np.testing.assert_array_equal(np.asarray(f4.member_costs),
+                                  np.asarray(f16.member_costs)[:, :4])
+
+
+@pytest.mark.parametrize("eng", [REF, PAL], ids=["reference", "pallas"])
+def test_domain_fan_matches_materialized_oracle(scen, eng):
+    fan = eng.fan_grid(scen, POOL.spec, DOMAINS, "avg_wait")
+    mat = eng.replay_grid(materialize_fan(scen, DOMAINS), POOL.spec,
+                          "avg_wait")
+    S, F, P = np.asarray(fan.member_costs).shape
+    np.testing.assert_array_equal(
+        np.asarray(mat.costs).reshape(S, F, P),
+        np.asarray(fan.member_costs))
+
+
+def test_domain_zero_is_legacy_iid_formula():
+    # D=0 must keep the legacy draw bit-for-bit (same f32 op order)
+    from repro.core.fan import failure_downs
+    spec = FanSpec(n=8, failure_prob=0.4, failure_frac=0.5, seed=11)
+    S, F, tot = 3, 8, 61
+    s, phi, u, totv, _ = _domain_draws(spec, S, F, tot)
+    down = np.asarray(failure_downs(spec, s, phi, u, totv))
+    un = np.asarray(u)
+    totf = np.float32(tot)
+    exact = np.asarray(phi) == 0
+    hit = (un[:, 0] < np.float32(spec.failure_prob)) & ~exact
+    frac = un[:, 1].astype(np.float32) * np.float32(spec.failure_frac)
+    legacy = np.where(hit, np.floor(totf * frac), np.float32(0.0))
+    np.testing.assert_array_equal(down, legacy.astype(np.int32))
+
+
+def test_domain_decide_fan_f1_is_bitwise_decide():
+    from conftest import make_cluster_state
+    pool = jnp.asarray([0, 1, 2], jnp.int32)
+    state = make_cluster_state(max_jobs=48, total_nodes=32, seed=5,
+                               n_queued=6, n_running=2, now=250.0)
+    d0 = REF.decide(state, pool)
+    d1 = REF.decide_fan(state, pool, dataclasses.replace(DOMAINS, n=1))
+    assert int(d0.policy_index) == int(d1.policy_index)
+    np.testing.assert_array_equal(np.asarray(d0.costs),
+                                  np.asarray(d1.costs))
+    np.testing.assert_array_equal(np.asarray(d0.run_mask),
+                                  np.asarray(d1.run_mask))
+
+
+def test_domain_fanspec_validation():
+    with pytest.raises(ValueError, match="failure_domains"):
+        FanSpec(n=4, failure_domains=-1)
