@@ -44,7 +44,7 @@ def main() -> None:
 
     from benchmarks import (adaptive, baseline_sweep, bursty,
                             figure1_jobdist, figure3_radar, overhead,
-                            roofline, table1_policy_dist)
+                            roofline, table1_policy_dist, train)
     suite = {
         "figure1_jobdist": figure1_jobdist.main,
         "figure3_radar": figure3_radar.main,
@@ -55,6 +55,8 @@ def main() -> None:
         "baseline_sweep": baseline_sweep.main,
         "adaptive": (lambda: adaptive.main(objectives=objectives)
                      if objectives else adaptive.main()),
+        "train": (lambda: train.main(objectives=objectives)
+                  if objectives else train.main()),
     }
     chosen = args.benchmarks or list(suite)
     t0 = time.perf_counter()

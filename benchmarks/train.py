@@ -1,0 +1,277 @@
+"""Trained θ vs the static field, per objective — the learning loop's
+claim as a regression-gated artifact (DESIGN.md §13).
+
+For each goal in ``OBJECTIVES`` this benchmark trains one policy per
+family in ``FAMILIES`` (``repro.learn``: the candidate population
+rides the fork axis of one batched replay grid per generation, static
+fixed points warm-start gen 0), picks the best family on the HELD-OUT
+scenarios, and scores it against the paper's static pool (WFP, FCFS,
+SJF) on the same held-out grid — statics and trained θ in ONE
+``replay_grid``, then rescored via ``objective.report_costs`` exactly
+as ``benchmarks/adaptive.py`` scores the twin.
+
+Emits ``BENCH_train.json``: per-goal learning curves (best-so-far
+candidate cost — monotone by construction, and required to actually
+descend), held-out scoreboards, and the deploy-parity check (the
+checkpoint round-trips through ``--pool trained:<ckpt>`` to bitwise
+the in-memory θ's costs).
+
+Gates (nonzero exit -> CI failure):
+
+  * trained θ loses to the best static on ANY goal on held-out
+    (within ``TOL_REL`` metric-space slack, cf. adaptive.py) — full
+    run only: smoke budgets are too small to promise wins, smoke
+    gates structure (artifact keys, curve monotonicity, deploy
+    parity, and never-loses-to-ALL-statics);
+  * any goal's best-so-far learning curve increases (monotonicity is
+    structural — a violation means the trainer is broken);
+  * no goal's curve strictly improves over its gen-0 candidates
+    (full run) — the search must actually learn, not coast on warm
+    starts;
+  * deploy parity fails: ``trained:<ckpt>`` costs differ bitwise from
+    the in-memory trained θ.
+
+CLI:
+    PYTHONPATH=src python benchmarks/train.py            # full
+    PYTHONPATH=src python benchmarks/train.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/train.py --objectives avg_wait
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+#: Same six goals as BENCH_adaptive.json — the acceptance criterion is
+#: "trained matches/beats the best static on all of them".
+OBJECTIVES = ("score", "avg_wait", "avg_slowdown", "makespan",
+              "utilization", "min:avg_wait@util>=0.7")
+FAMILIES = ("lin", "wfp")
+TOTAL_NODES = 32
+TOL_REL = 0.05             # metric-space slack (cf. adaptive.py)
+SEED = 0
+
+REQUIRED_KEYS = ("benchmark", "objectives", "results", "summary")
+
+
+def _sizes(smoke: bool) -> Dict[str, int]:
+    return (dict(jobs=24, n_train=3, n_heldout=2, population=6,
+                 generations=3)
+            if smoke else
+            dict(jobs=48, n_train=8, n_heldout=4, population=16,
+                 generations=10))
+
+
+def _scenarios(smoke: bool, seed: int):
+    from repro.cluster.workload import poisson_trace, split_scenarios
+    sz = _sizes(smoke)
+    rng = np.random.default_rng(seed)
+    trace_fn = lambda r: poisson_trace(
+        sz["jobs"], TOTAL_NODES, 45.0, (1, TOTAL_NODES // 4),
+        (60.0, 1800.0), rng=r)
+    return split_scenarios(rng, trace_fn, sz["n_train"],
+                           sz["n_heldout"], TOTAL_NODES)
+
+
+def _mean_metric_rows(engine, scenarios, pool) -> List[Dict[str, float]]:
+    """Per-policy metric dicts: each metric averaged over the held-out
+    scenarios, from ONE (S, P) grid — ``report_costs`` rows."""
+    out = engine.replay_grid(scenarios, pool.spec)
+    m = out.metrics
+    return [{f: float(np.asarray(v, np.float64)[:, p].mean())
+             for f, v in zip(m._fields, m)}
+            for p in range(len(pool))]
+
+
+def _slacked(row: Dict[str, float], tol: float, objective: str
+             ) -> Dict[str, float]:
+    """The trained row with a ``tol`` relative handicap per metric
+    (identical semantics to adaptive.py: utilization is a reward so it
+    grows; goal-constraint metrics are pinned — a feasibility flip is
+    not noise)."""
+    from repro.core.objective import Constrained, parse_objective
+    goal = parse_objective(objective)
+    pinned = ({c.metric for c in goal.constraints}
+              if isinstance(goal, Constrained) else set())
+    return {m: v if m in pinned
+            else v * (1.0 + tol) if m == "utilization"
+            else v * (1.0 - tol)
+            for m, v in row.items()}
+
+
+def bench_objective(objective: str, engine, train_scen, heldout,
+                    smoke: bool, seed: int, ckpt_root: str) -> Dict:
+    """Train every family on one goal, checkpoint the held-out winner,
+    and build its scoreboard + deploy-parity record."""
+    from repro.core.objective import report_costs
+    from repro.core.policies import parse_pool
+    from repro.learn import TrainConfig, train
+
+    sz = _sizes(smoke)
+    goal_tag = "".join(c if c.isalnum() else "_" for c in objective)
+    t0 = time.perf_counter()
+    runs = {}
+    for family in FAMILIES:
+        runs[family] = train(
+            train_scen, heldout,
+            TrainConfig(family=family, strategy="cem",
+                        population=sz["population"],
+                        generations=sz["generations"],
+                        objective=objective, seed=seed, patience=0),
+            engine=engine,
+            checkpoint_dir=f"{ckpt_root}/{goal_tag}/{family}")
+    train_wall = time.perf_counter() - t0
+
+    # cross-family pick on a JOINT held-out grid (pool-relative goals
+    # need a within-pool comparison; elementwise goals are unaffected)
+    statics = parse_pool("paper")
+    board = runs[FAMILIES[0]].pool
+    for family in FAMILIES[1:]:
+        board = board + runs[family].pool
+    board = board + statics
+    rows = _mean_metric_rows(engine, heldout, board)
+    costs = report_costs(objective, rows)
+    fam_idx = int(np.argmin(costs[:len(FAMILIES)]))
+    winner = runs[FAMILIES[fam_idx]]
+
+    # deploy parity: trained:<ckpt> must reproduce the in-memory θ's
+    # held-out costs bitwise
+    ckpt = f"{ckpt_root}/{goal_tag}/{FAMILIES[fam_idx]}"
+    deployed = parse_pool(f"trained:{ckpt}")
+    via_ckpt = np.asarray(engine.replay_grid(heldout, deployed.spec,
+                                             "avg_wait").costs)[:, 0]
+    in_mem = np.asarray(engine.replay_grid(heldout, winner.pool.spec,
+                                           "avg_wait").costs)[:, 0]
+    deploy_parity = bool(np.array_equal(via_ckpt, in_mem))
+
+    # scoreboard under the goal, trained row slack-handicapped
+    trained_row = rows[fam_idx]
+    static_rows = rows[len(FAMILIES):]
+    g = report_costs(objective, [_slacked(trained_row, TOL_REL, objective)]
+                     + static_rows)
+    static_costs = {n: float(c)
+                    for n, c in zip(statics.names,
+                                    costs[len(FAMILIES):])}
+    curve = [r["cand_best_so_far"] for r in winner.history]
+    return {
+        "family": winner.family,
+        "theta_desc": winner.best_desc,
+        "trained_cost": float(costs[fam_idx]),
+        "static_costs": static_costs,
+        "best_static": min(static_costs, key=static_costs.get),
+        "matched_best": bool(g[0] <= min(g[1:]) + 1e-9),
+        "loses_to_all": bool(g[0] > max(g[1:]) + 1e-9),
+        "curve": curve,
+        "curve_monotone": bool(all(b <= a + 1e-12
+                                   for a, b in zip(curve, curve[1:]))),
+        "curve_improved": bool(curve[-1] < curve[0] - 1e-12),
+        "deploy_parity": deploy_parity,
+        "generations_run": winner.generations_run,
+        "train_wall_s": train_wall,
+        "checkpoint": ckpt,
+    }
+
+
+def main(objectives: Sequence[str] = OBJECTIVES, smoke: bool = False,
+         seed: int = SEED, out: str = "BENCH_train.json") -> List[str]:
+    from repro.core.engine import DrainEngine
+    from repro.core.objective import validate_objective
+
+    canon = {}
+    for g in objectives:
+        try:
+            canon[g] = validate_objective(g).spec
+        except ValueError as e:
+            raise SystemExit(str(e))
+    engine = DrainEngine(backend="auto")
+    train_scen, heldout = _scenarios(smoke, seed)
+    ckpt_root = tempfile.mkdtemp(prefix="bench_train_ckpt_")
+
+    lines: List[str] = []
+    results: Dict[str, Dict] = {}
+    failures: List[str] = []
+    for g in objectives:
+        row = bench_objective(g, engine, train_scen, heldout, smoke,
+                              seed, ckpt_root)
+        results[g] = row
+        lines.append(
+            f"train,objective={g},family={row['family']},"
+            f"trained={row['trained_cost']:.3f},"
+            f"best_static={row['best_static']}="
+            f"{row['static_costs'][row['best_static']]:.3f},"
+            f"matched_best={row['matched_best']},"
+            f"curve={row['curve'][0]:.3f}->{row['curve'][-1]:.3f},"
+            f"deploy_parity={row['deploy_parity']}")
+        if not row["curve_monotone"]:
+            failures.append(f"{g!r}: best-so-far curve increased "
+                            f"({row['curve']})")
+        if not row["deploy_parity"]:
+            failures.append(f"{g!r}: trained:<ckpt> deploy costs "
+                            f"differ from the in-memory θ")
+        if row["loses_to_all"]:
+            failures.append(
+                f"trained loses to EVERY static on {g!r}: "
+                f"{row['trained_cost']:.3f} vs {row['static_costs']}")
+        if not smoke and not row["matched_best"]:
+            failures.append(
+                f"trained loses to the best static on {g!r}: "
+                f"{row['trained_cost']:.3f} vs {row['static_costs']}")
+
+    improved = [g for g in objectives if results[g]["curve_improved"]]
+    if not smoke and not improved:
+        failures.append(
+            "no goal's learning curve improved over its gen-0 "
+            "candidates — the search is not learning")
+    matched = [g for g in objectives if results[g]["matched_best"]]
+    summary = {
+        "objectives_matched": matched,
+        "n_matched": len(matched),
+        "objectives_improved": improved,
+        "tol_rel": TOL_REL,
+        "families": list(FAMILIES),
+    }
+    doc = {
+        "benchmark": "train",
+        "smoke": smoke,
+        "seed": seed,
+        "total_nodes": TOTAL_NODES,
+        "sizes": _sizes(smoke),
+        "objectives": {g: canon[g] for g in objectives},
+        "results": results,
+        "summary": summary,
+    }
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    missing = [k for k in REQUIRED_KEYS if k not in doc]
+    if missing:
+        raise SystemExit(f"{out} is missing expected keys: {missing}")
+    lines.append(
+        f"train,summary,n_matched={len(matched)}/{len(objectives)},"
+        f"improved=[{';'.join(improved)}],artifact={out}")
+    if failures:
+        raise SystemExit("train regression: " + " | ".join(failures))
+    return lines
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--objectives", nargs="+", default=None,
+                    help=f"objective grammars (default: {OBJECTIVES})")
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--out", default="BENCH_train.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: tiny population/budget; gates "
+                         "structure (monotone curve, deploy parity, "
+                         "never-loses-to-all) but not beat-the-best")
+    args = ap.parse_args()
+    for line in main(objectives=tuple(args.objectives or OBJECTIVES),
+                     smoke=args.smoke, seed=args.seed, out=args.out):
+        print(line)

@@ -148,6 +148,29 @@ print(f"quarantined={stats['quarantined']} resyncs={stats['resyncs']} "
       f"miss_rate={stats['miss_rate']:.3f} "
       f"ladder_engaged={stats['ladder_engaged']}")
 
+# --- train, then deploy: closing the θ loop --------------------------
+# The twin so far SELECTS among fixed policies; repro.learn SEARCHES θ
+# itself (DESIGN.md §13).  A CEM/ES population of candidate parameter
+# vectors rides the same fork axis — one replay grid per generation —
+# warm-started from the static fixed points and gated on held-out
+# scenarios.  The checkpoint then deploys through the pool grammar:
+# ``trained:<ckpt>`` is just another term.  Full walkthrough:
+# examples/train_policy.py; CLI:
+#     twin_loop --train 12 --train-dir CK --objective avg_wait
+#     twin_loop --pool trained:CK,paper
+from repro.cluster.workload import split_scenarios
+from repro.learn import TrainConfig, train
+
+rng = np.random.default_rng(0)
+tr, held = split_scenarios(rng, lambda r: paper_synthetic_trace(rng=r),
+                           n_train=3, n_heldout=2, total_nodes=32)
+res = train(tr, held, TrainConfig(family="lin", population=8,
+                                  generations=4,
+                                  objective="avg_wait", seed=0),
+            engine=DrainEngine())
+print(f"\ntrained {res.best_desc}: held-out {res.best_heldout:.1f} "
+      f"({res.generations_run} generations)")
+
 # --- Figure-3-style comparison ----------------------------------------
 areas = radar_report(per_policy)
 print(f"{'method':10s} {'radar area':>10s} {'avg wait':>9s} "

@@ -22,7 +22,7 @@ real center logs (e.g. the Polaris-like distribution of Figure 1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -311,6 +311,48 @@ def make_scenario(trace: Sequence[JobSpec], total_nodes: int,
                   max_jobs: Optional[int] = None) -> ScenarioSet:
     """One trace as an S=1 ``ScenarioSet`` (``engine.replay``'s input)."""
     return stack_scenarios([trace], total_nodes, max_jobs=max_jobs)
+
+
+def split_scenarios(rng: np.random.Generator,
+                    trace_fn: Callable[[np.random.Generator],
+                                       Sequence[JobSpec]],
+                    n_train: int, n_heldout: int,
+                    total_nodes: Union[int, Sequence[int]],
+                    max_jobs: Optional[int] = None,
+                    ) -> Tuple[ScenarioSet, ScenarioSet]:
+    """Deterministic train/held-out split for the ``learn`` trainer.
+
+    Draws ``n_train + n_heldout`` traces SEQUENTIALLY from the single
+    caller-owned ``rng`` (``trace_fn(rng)`` per trace, the PR-7 ``rng=``
+    generator idiom), then partitions by index: the first ``n_train``
+    traces are the training set, the last ``n_heldout`` the held-out
+    set.  The two sets are disjoint segments of one stream — an index
+    partition, not a re-draw — so train/eval leakage is structurally
+    impossible, and the same rng state reproduces the same split
+    bitwise.  Both sets are padded to a COMMON ``max_jobs`` so a θ
+    evaluated on either sees identical table shapes (one compiled
+    replay shape per S).
+    """
+    if n_train < 1 or n_heldout < 1:
+        raise ValueError(
+            f"need n_train >= 1 and n_heldout >= 1, got "
+            f"{n_train}/{n_heldout}")
+    traces = [list(trace_fn(rng)) for _ in range(n_train + n_heldout)]
+    if max_jobs is None:
+        longest = max(len(t) for t in traces)
+        max_jobs = max(64, 1 << int(np.ceil(np.log2(longest + 1))))
+    if isinstance(total_nodes, (int, np.integer)):
+        tn_train: Union[int, Sequence[int]] = int(total_nodes)
+        tn_held: Union[int, Sequence[int]] = int(total_nodes)
+    else:
+        totals = [int(t) for t in total_nodes]
+        if len(totals) != n_train + n_heldout:
+            raise ValueError(
+                f"{len(totals)} total_nodes for {n_train + n_heldout} "
+                f"traces")
+        tn_train, tn_held = totals[:n_train], totals[n_train:]
+    return (stack_scenarios(traces[:n_train], tn_train, max_jobs=max_jobs),
+            stack_scenarios(traces[n_train:], tn_held, max_jobs=max_jobs))
 
 
 def slice_scenarios(scenarios: ScenarioSet, start: int,

@@ -657,6 +657,22 @@ class DrainEngine:
             fan_width=cwidth,
         )
 
+    # -- population training (DESIGN.md §13) ---------------------------
+    def generation_costs(self, scenarios, pool,
+                         objective: ObjectiveLike = None,
+                         fan=None) -> jax.Array:
+        """The trainer's generation-eval entry point: per-(scenario,
+        candidate) costs, (S, P), for a candidate population riding
+        the fork axis.  ONE jitted grid — ``replay_grid`` when ``fan``
+        is None, else ``fan_grid`` with ``FanSpec``-driven domain
+        randomization of the training traces (costs are then the
+        goal's distributional reduction over the fan axis).
+        Deadlocked rollouts cost +inf, so they rank strictly worst
+        under any goal."""
+        if fan is None:
+            return self.replay_grid(scenarios, pool, objective).costs
+        return self.fan_grid(scenarios, pool, fan, objective).costs
+
     # -- adaptive racing (DESIGN.md §11) -------------------------------
     def race_grid(self, scenarios, pool, race,
                   objective: ObjectiveLike = None):

@@ -443,6 +443,27 @@ class PolicyPool:
         return cls(spec=pool, names=tuple(names))
 
 
+def theta_pool(family: int, thetas: np.ndarray,
+               names: Sequence[str] | None = None) -> PolicyPool:
+    """Pool construction from trained θ: (N, N_THETA) rows of ONE
+    family become a PolicyPool riding the fork axis — this is how the
+    ``learn`` trainer evaluates a whole candidate generation as one
+    replay grid, and how a checkpointed θ deploys."""
+    th = np.asarray(thetas, np.float32)
+    if th.ndim == 1:
+        th = th[None, :]
+    if th.ndim != 2 or th.shape[1] != N_THETA:
+        raise ValueError(f"thetas must be (N, {N_THETA}), got {th.shape}")
+    if int(family) not in FAMILY_NAMES:
+        raise ValueError(f"unknown family {family}; have {FAMILY_NAMES}")
+    spec = PolicySpec(jnp.full((th.shape[0],), int(family), jnp.int32),
+                      jnp.asarray(th))
+    if names is None:
+        names = [describe_spec(int(family), th[i])
+                 for i in range(th.shape[0])]
+    return PolicyPool(spec=spec, names=tuple(names))
+
+
 _STATIC_BY_NAME = {POLICY_NAMES[i].lower(): i for i in EXTENDED_POOL}
 _FAMILY_BY_NAME = {v: k for k, v in FAMILY_NAMES.items()}
 
@@ -476,6 +497,10 @@ def parse_pool(grammar: str) -> PolicyPool:
       ``wfp:a=1..5x5:tau=600..7200x5`` -> 25-point DRAS-style grid
       ``expf:tau=600``               -> fast-aging EXPF
       ``lin:est=1:wait=-0.01``       -> linear scorer over features
+      ``trained:<ckpt-dir>``         -> learned θ from a checkpoint
+                                        (``learn.train``); statics can
+                                        ride alongside as a safety
+                                        floor: ``trained:ckpt,paper``
 
     Term order is tie-break priority, matching ``pool_array``.
     """
@@ -483,6 +508,19 @@ def parse_pool(grammar: str) -> PolicyPool:
     names: List[str] = []
     for term in (t.strip() for t in grammar.split(",")):
         if not term:
+            continue
+        if term.lower().startswith("trained:"):
+            # Everything after the prefix is a filesystem path — keep
+            # it out of the ":"-assignment split below.
+            path = term[len("trained:"):].strip()
+            if not path:
+                raise ValueError(
+                    "trained: needs a checkpoint dir, e.g. "
+                    "trained:checkpoints/policy")
+            from repro.learn.trainer import load_trained_pool  # lazy: learn imports core
+            trained = load_trained_pool(path)
+            specs.extend(spec_rows(trained.spec))
+            names.extend(trained.names)
             continue
         head, *assigns = term.split(":")
         name = head.strip().lower()

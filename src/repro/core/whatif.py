@@ -563,6 +563,29 @@ def sharded_fan_grid(mesh: Mesh, axis: str = "data",
     return wrapper
 
 
+def sharded_generation_costs(mesh: Mesh, axis: str = "data",
+                             engine: Optional[DrainEngine] = None,
+                             objective: ObjectiveLike = None, *,
+                             fan=None,
+                             block_size: Optional[int] = None,
+                             prefetch_depth: int = 2):
+    """Fleet-scale generation evaluation for the ``learn`` trainer:
+    the sharded twin of ``engine.generation_costs``.  Returns a
+    function ``(scenarios, pool) -> (S, P) costs`` — one candidate
+    population riding the fork axis, streamed over the mesh via
+    ``sharded_replay_grid`` (``fan=None``) or ``sharded_fan_grid``
+    (FanSpec domain randomization), both bit-identical to the
+    one-shot engine entry point."""
+    if fan is None:
+        run = sharded_replay_grid(mesh, axis, engine, objective,
+                                  block_size=block_size,
+                                  prefetch_depth=prefetch_depth)
+    else:
+        run = sharded_fan_grid(mesh, axis, engine, objective, fan=fan,
+                               block_size=block_size)
+    return lambda scenarios, pool: run(scenarios, pool).costs
+
+
 @functools.partial(jax.jit,
                    static_argnames=("spec", "P", "B", "S", "lo", "width"))
 def _race_block_inputs(submit, nodes, est, true_rt, valid, totals, pool,

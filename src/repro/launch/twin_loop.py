@@ -19,6 +19,10 @@
         # raced fan: successive-halving to F_max=64, 500 ms anytime cap
     python -m repro.launch.twin_loop --replay-grid 8 --fan 64 --race \\
         --race-f0 4                   # raced S x F x P grid
+    python -m repro.launch.twin_loop --train 24 --train-family lin \\
+        --train-dir ckpt/policy       # learn θ (DESIGN.md §13) ...
+    python -m repro.launch.twin_loop --pool trained:ckpt/policy,paper \\
+        # ... then deploy it live, statics riding as the safety floor
 
 ``--objective`` is the administrator-configured optimization goal
 (§3.4; ``repro.core.objective``, DESIGN.md §8): the goal grammar is
@@ -50,6 +54,17 @@ device-computed confidence intervals (logged per cycle); in
 ``--replay-grid`` mode the grid becomes S × F × P and ``--prune``
 turns on the goal-conditioned low-F pre-pass that drops dominated
 policies before the full fan.
+
+``--train G`` runs the on-device policy-learning loop (``repro.learn``,
+DESIGN.md §13) for G generations instead of the co-simulation: each
+generation's candidate θ population rides the fork axis of ONE batched
+replay grid over training scenarios split deterministically from the
+held-out set (``workload.split_scenarios``), scored by ``--objective``
+(with ``--fan*`` flags domain-randomizing the training traces).  The
+incumbent checkpoints to ``--train-dir`` and deploys via
+``--pool trained:<dir>``; the final report scores it against the
+``--pool`` statics on the held-out scenarios.  ``--resume`` continues
+a training run from its latest checkpoint, bitwise.
 
 ``--pool`` takes the sweep grammar (``repro.core.policies.parse_pool``):
 one fork per grid point, e.g. a DRAS-style 25-point parameter sweep
@@ -244,6 +259,62 @@ def replay_grid(args, engine: DrainEngine, goal: Objective) -> None:
           f"{[names[int(b)] for b in best]}")
 
 
+def train_mode(args, engine: DrainEngine, goal: Objective,
+               floor_pool) -> None:
+    """--train: the repro.learn loop — train θ on a deterministic
+    scenario split, checkpoint to --train-dir, then score the incumbent
+    against the --pool statics on the held-out scenarios (the same
+    comparison ``--pool trained:<dir>,<statics>`` deploys live)."""
+    import time
+
+    from repro.cluster.workload import split_scenarios
+    from repro.learn import TrainConfig, train
+
+    rng = np.random.default_rng(args.seed)
+    if args.trace == "paper":
+        trace_fn = lambda r: paper_synthetic_trace(rng=r)
+    elif args.trace == "bursty":
+        trace_fn = lambda r: bursty_trace(
+            args.jobs, args.nodes, 8.0, (1, args.nodes), (30.0, 900.0),
+            rng=r)
+    else:
+        trace_fn = lambda r: poisson_trace(
+            args.jobs, args.nodes, 8.0, (1, args.nodes), (30.0, 900.0),
+            rng=r)
+    train_scen, heldout = split_scenarios(
+        rng, trace_fn, args.train_scenarios, args.train_heldout,
+        args.nodes)
+    cfg = TrainConfig(family=args.train_family,
+                      strategy=args.train_strategy,
+                      population=args.train_pop, generations=args.train,
+                      objective=goal, seed=args.seed, fan=make_fan(args))
+    print(f"train: {cfg.strategy}/{cfg.family} pop={cfg.population} x "
+          f"{args.train_scenarios} train scenarios "
+          f"(+{args.train_heldout} held-out), goal {goal}")
+    t0 = time.perf_counter()
+    res = train(train_scen, heldout, cfg, engine=engine,
+                checkpoint_dir=args.train_dir or None,
+                resume=args.resume, log_fn=print)
+    wall = time.perf_counter() - t0
+    print(f"trained {res.generations_run} generations in {wall:.1f}s"
+          f"{' (early stop)' if res.stopped_early else ''}: "
+          f"{res.best_desc}")
+
+    # held-out scoreboard: incumbent + the --pool statics in ONE grid
+    # (within-pool, so rank-based goals compare apples to apples)
+    board = res.pool + floor_pool
+    costs = np.asarray(engine.generation_costs(heldout, board.spec, goal),
+                       np.float64)
+    agg = costs.mean(axis=0)
+    print(f"{'policy':>16s} {'held-out cost':>14s}")
+    for p, name in enumerate(board.names):
+        mark = " <- trained" if p == 0 else ""
+        print(f"{name:>16s} {agg[p]:14.4f}{mark}")
+    if args.train_dir:
+        print(f"deploy: --pool trained:{args.train_dir}"
+              f"{',' + args.pool if args.pool else ''}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", choices=("paper", "poisson", "bursty"),
@@ -340,6 +411,34 @@ def main() -> None:
                     help="scheduling-pass backend for the what-if engine "
                          "(auto: reference on CPU, pallas on TPU)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--train", type=int, default=0, metavar="G",
+                    help="train θ for G generations (repro.learn, "
+                         "DESIGN.md §13) instead of running the twin: "
+                         "each generation is ONE batched replay grid "
+                         "with the candidate population on the fork "
+                         "axis, scored by --objective")
+    ap.add_argument("--train-family", choices=("lin", "wfp", "expf"),
+                    default="lin",
+                    help="policy family whose θ is searched (lin: "
+                         "linear feature scorer; wfp/expf: the "
+                         "parametric aging families)")
+    ap.add_argument("--train-strategy", choices=("cem", "es"),
+                    default="cem",
+                    help="search strategy: cross-entropy (cem) or "
+                         "OpenAI-style evolution strategy (es)")
+    ap.add_argument("--train-pop", type=int, default=16, metavar="N",
+                    help="candidate population per generation")
+    ap.add_argument("--train-scenarios", type=int, default=8, metavar="S",
+                    help="training scenarios (drawn with --trace/--seed "
+                         "via workload.split_scenarios)")
+    ap.add_argument("--train-heldout", type=int, default=4, metavar="S",
+                    help="held-out scenarios for model selection and "
+                         "early stopping (disjoint from training by "
+                         "construction)")
+    ap.add_argument("--train-dir", default="", metavar="DIR",
+                    help="checkpoint directory for the trained policy "
+                         "(deploy later with --pool trained:DIR); empty "
+                         "trains in-memory only")
     ap.add_argument("--replay-grid", type=int, default=0, metavar="S",
                     help="evaluate an S-scenario x pool baseline grid in "
                          "one batched replay instead of running the "
@@ -379,8 +478,23 @@ def main() -> None:
                              or args.budget_s):
         ap.error("--chaos/--snapshot-dir/--budget-s apply to the twin "
                  "co-simulation, not --replay-grid")
-    if (args.kill_after_cycle or args.resume) and not args.snapshot_dir:
-        ap.error("--kill-after-cycle/--resume require --snapshot-dir")
+    if args.train:
+        if args.replay_grid:
+            ap.error("--train and --replay-grid are mutually exclusive")
+        if (args.failures or args.ensemble > 1 or args.race
+                or args.chaos or args.snapshot_dir or args.budget_s
+                or args.prune or args.kill_after_cycle):
+            ap.error("--train runs the learning loop; co-simulation and "
+                     "racing flags do not apply")
+        if args.resume and not args.train_dir:
+            ap.error("--train --resume requires --train-dir")
+    elif (args.train_dir or args.train_pop != 16
+          or args.train_scenarios != 8 or args.train_heldout != 4):
+        ap.error("--train-* flags apply to --train G")
+    if (args.kill_after_cycle or args.resume) and not (
+            args.snapshot_dir or args.train):
+        ap.error("--kill-after-cycle/--resume require --snapshot-dir "
+                 "(or --train --train-dir)")
     from repro.launch.cache import enable_persistent_cache
     enable_persistent_cache(enabled=not args.no_compile_cache)
     engine = DrainEngine(backend=args.backend)
@@ -393,6 +507,8 @@ def main() -> None:
 
     if args.replay_grid:
         return replay_grid(args, engine, goal)
+    if args.train:
+        return train_mode(args, engine, goal, pool)
 
     if args.trace == "paper":
         trace = paper_synthetic_trace(seed=args.seed)
